@@ -1,0 +1,32 @@
+"""The paper's cluster configurations (Table II).
+
+Throughput c_i is proportional to vCPU count (the paper's workers are
+QingCloud "performance type" VMs whose training throughput scales ~linearly
+with vCPUs for CPU-bound CNN training)."""
+
+import numpy as np
+
+# vCPUs -> count (Table II)
+CLUSTERS = {
+    "A": {2: 2, 4: 2, 8: 3, 12: 1},
+    "B": {2: 2, 4: 4, 8: 8, 16: 2},
+    "C": {2: 1, 4: 4, 8: 10, 12: 12, 16: 5},
+    "D": {4: 4, 8: 20, 12: 18, 16: 16},
+}
+
+
+def cluster_speeds(name: str) -> np.ndarray:
+    cfg = CLUSTERS[name]
+    c = []
+    for vcpus, count in sorted(cfg.items()):
+        c.extend([float(vcpus)] * count)
+    return np.asarray(c)
+
+
+def sim_speeds(c_dataset: np.ndarray, k: int) -> np.ndarray:
+    """Convert dataset-units/sec -> partitions/sec for a scheme with k
+    partitions.  Schemes use different k (heter-aware uses 2m, cyclic uses
+    m), so partition SIZE differs; without this normalization, cross-scheme
+    iteration times are not comparable (each partition is 1/k of the same
+    dataset)."""
+    return np.asarray(c_dataset, float) * k

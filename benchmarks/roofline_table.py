@@ -1,0 +1,26 @@
+"""Aggregate the dry-run JSONs (results/dryrun/) into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def run():
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        rows.append({
+            "bench": "roofline",
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "t_compute_s": d["t_compute_s"], "t_memory_s": d["t_memory_s"],
+            "t_collective_s": d["t_collective_s"], "bottleneck": d["bottleneck"],
+            "useful_ratio": d["useful_ratio"], "mfu_at_roofline": d["mfu_at_roofline"],
+            "state_bytes_per_chip": d.get("state_bytes_per_chip"),
+            "fits": d.get("fits_16GiB_state"),
+        })
+    return rows

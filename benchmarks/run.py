@@ -1,0 +1,88 @@
+"""Benchmark driver — one section per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (then detailed per-bench CSVs).
+Env: BENCH_FAST=1 shrinks iteration counts for CI-speed runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _fast() -> bool:
+    return os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def main() -> None:
+    from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
+    from benchmarks import kernels_bench, roofline_table
+
+    t0 = time.time()
+    all_rows = []
+    summary = []
+
+    # --- Fig.2: delay sweep on Cluster-A ---
+    t = time.time()
+    rows = fig2_delay.run(n_iters=50 if _fast() else 200)
+    claims = fig2_delay.derived_claims(rows)
+    all_rows += rows
+    summary.append(("fig2_delay", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items())))
+
+    # --- Fig.3: clusters B/C/D ---
+    t = time.time()
+    rows = fig3_clusters.run(n_iters=40 if _fast() else 150)
+    all_rows += rows
+    het = {r["cluster"]: r["mean_iter_s"] for r in rows if r["scheme"] == "heter_aware"}
+    cyc = {r["cluster"]: r["mean_iter_s"] for r in rows if r["scheme"] == "cyclic"}
+    summary.append(("fig3_clusters", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"speedup_{c}={cyc[c]/het[c]:.2f}" for c in het)))
+
+    # --- Fig.4: convergence vs SSP (real training) ---
+    t = time.time()
+    rows = fig4_convergence.run(n_steps=12 if _fast() else 60)
+    all_rows += rows
+    finals = {}
+    for r in rows:
+        finals[r["scheme"]] = (r["sim_time_s"], r["loss"])
+    summary.append(("fig4_convergence", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{s}:loss={l:.3f}@t={tt:.1f}s" for s, (tt, l) in finals.items())))
+
+    # --- Fig.5: resource usage ---
+    t = time.time()
+    rows = fig5_resource_usage.run(n_iters=50 if _fast() else 200)
+    all_rows += rows
+    summary.append(("fig5_resource_usage", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{r['scheme']}={r['resource_usage']:.2f}" for r in rows)))
+
+    # --- kernels ---
+    t = time.time()
+    rows = kernels_bench.run()
+    all_rows += rows
+    for r in rows:
+        summary.append((r["name"], r["us_per_call"], r["derived"]))
+
+    # --- roofline table from dry-run artifacts ---
+    rows = roofline_table.run()
+    all_rows += rows
+    if rows:
+        worst = min(rows, key=lambda r: r["mfu_at_roofline"] or 0)
+        summary.append(("roofline_cells", float(len(rows)),
+                        f"worst_mfu={worst['arch']}/{worst['shape']}={worst['mfu_at_roofline']:.4f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.2f},{derived}")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_rows.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"# {len(all_rows)} detail rows -> results/bench_rows.json "
+          f"(total {time.time() - t0:.1f}s)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end driver: coded data-parallel training of a ~100M-class LM with
+per-step faults, elastic throughput re-estimation, and async checkpoints.
+
+Default invocation trains a width/depth-reduced llama config for a few
+hundred steps on CPU (env SMOKE=1 shrinks further for CI):
+
+  PYTHONPATH=src python examples/train_coded.py
+
+This is a thin veneer over the production launcher — the same run via CLI:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \\
+      --steps 300 --scheme heter_aware --s 1 --m 6 --straggler fault \\
+      --speeds 1,1,2,2,4,4 --ckpt-dir /tmp/coded_ckpt
+"""
+
+import os
+
+from repro.launch.train import main
+
+SMOKE = os.environ.get("SMOKE", "0") == "1"
+
+if __name__ == "__main__":
+    main([
+        "--arch", "llama3.2-1b",
+        "--reduced",
+        "--steps", "40" if SMOKE else "300",
+        "--scheme", "heter_aware",
+        "--s", "1",
+        "--m", "6",
+        "--part-mb", "2",
+        "--seq-len", "64" if SMOKE else "128",
+        "--straggler", "fault",
+        "--speeds", "1,1,2,2,4,4",
+        "--ckpt-dir", "/tmp/coded_ckpt",
+        "--ckpt-every", "20",
+    ])

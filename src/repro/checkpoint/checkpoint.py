@@ -1,0 +1,159 @@
+"""Checkpointing: keypath-flattened npz shards + JSON manifest.
+
+Design constraints from the fault-tolerance story (DESIGN.md §4):
+  - *restart-anywhere*: the checkpoint encodes no mesh/topology.  Arrays are
+    stored by tree keypath, fully replicated logical values; on restore they
+    are re-sharded by whatever specs the (possibly different-sized) new mesh
+    supplies.  Worker count, coding scheme, and c estimates can all change
+    across a restart — the elastic-restart example exercises exactly this.
+  - *async*: `AsyncCheckpointer` snapshots to host (device_get) on the
+    training thread, then writes on a background thread so the step loop
+    never blocks on disk.
+  - *atomic*: writes go to ``<dir>.tmp`` then os.replace, so a mid-write
+    fault never corrupts the latest checkpoint.
+
+At real pod scale each host would write its addressable shards
+(`jax.experimental.multihost_utils` / array-serialization); the manifest
+format is deliberately compatible with that extension.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, state: PyTree, meta: dict | None = None) -> str:
+    """Write checkpoint for ``step``.  Returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "meta": meta or {},
+        "format": "repro-ckpt-v1",
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    like: PyTree,
+    sharding_fn: Callable[[str, np.ndarray], Any] | None = None,
+) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shapes must match; mesh needn't).
+
+    ``sharding_fn(key, array)`` may return a jax.sharding.Sharding to place
+    each leaf directly onto the new mesh (elastic restart path).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, ref in paths:
+        key = "/".join(_path_str(p) for p in kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if sharding_fn is not None:
+            sh = sharding_fn(key, arr)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+
+
+class AsyncCheckpointer:
+    """Off-critical-path checkpointing: snapshot on caller thread (device_get
+    is the only sync point), serialize+write on a worker thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_error: BaseException | None = None
+
+    def save(self, step: int, state: PyTree, meta: dict | None = None) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _write():
+            try:
+                save_checkpoint(self.directory, step, host_state, meta)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        import shutil
+
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,63 @@
+"""Heterogeneity-aware gradient coding — the paper's contribution.
+
+Public API:
+  allocation:  heterogeneity-aware partition allocation (Eq. 5/6)
+  coding:      B-matrix construction — Alg. 1 + baselines
+  groups:      group-based scheme (Alg. 2/3)
+  decoding:    decode-vector solve + group fast path
+  throughput:  EWMA c_i estimation / elastic re-encode trigger
+  straggler:   straggler pattern models
+  simulator:   heterogeneous-cluster timing model (Figs. 2/3/5)
+  aggregator:  coded gradient aggregation on a JAX mesh
+"""
+
+from repro.core.allocation import Allocation, allocate, support_matrix
+from repro.core.coding import (
+    CodingScheme,
+    build_cyclic,
+    build_fractional_repetition,
+    build_heter_aware,
+    build_naive,
+    make_scheme,
+    satisfies_condition1,
+)
+from repro.core.decoding import DecodeError, Decoder, solve_decode_vector
+from repro.core.groups import build_group_based, find_all_groups, prune_groups
+from repro.core.simulator import ClusterSim, theoretical_optimal_time
+from repro.core.straggler import (
+    ComposedModel,
+    FaultModel,
+    FixedDelayStragglers,
+    NoStragglers,
+    StragglerProfile,
+    TransientStragglers,
+)
+from repro.core.throughput import ThroughputEstimator
+
+__all__ = [
+    "Allocation",
+    "allocate",
+    "support_matrix",
+    "CodingScheme",
+    "build_cyclic",
+    "build_fractional_repetition",
+    "build_heter_aware",
+    "build_naive",
+    "build_group_based",
+    "make_scheme",
+    "satisfies_condition1",
+    "DecodeError",
+    "Decoder",
+    "solve_decode_vector",
+    "find_all_groups",
+    "prune_groups",
+    "ClusterSim",
+    "theoretical_optimal_time",
+    "ComposedModel",
+    "FaultModel",
+    "FixedDelayStragglers",
+    "NoStragglers",
+    "StragglerProfile",
+    "TransientStragglers",
+    "ThroughputEstimator",
+]

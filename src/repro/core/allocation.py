@@ -1,0 +1,143 @@
+"""Heterogeneity-aware data-partition allocation (paper §IV-A, Eq. 5/6).
+
+The dataset is split into ``k`` equal partitions; to tolerate ``s`` full
+stragglers every partition must be replicated on ``s+1`` distinct workers.
+Worker ``i`` with throughput ``c_i`` receives
+
+    n_i = k*(s+1) * c_i / sum(c)          (Eq. 5)
+
+partitions, assigned cyclically (Eq. 6) so that consecutive workers cover
+consecutive arcs of the partition circle and every partition lands on exactly
+``s+1`` distinct workers.
+
+The paper assumes Eq. 5 yields integers; real clusters do not.  We integerize
+with largest-remainder rounding subject to ``sum(n) == k*(s+1)`` and
+``n_i <= k`` (an arc longer than the circle would put two copies of one
+partition on the same worker, which is useless for straggler tolerance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Allocation",
+    "proportional_counts",
+    "cyclic_assignment",
+    "allocate",
+    "support_matrix",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    """Partition→worker assignment.
+
+    Attributes:
+      k: number of data partitions.
+      s: number of tolerated stragglers.
+      counts: ``n_i`` per worker, shape (m,).
+      partitions: tuple of per-worker tuples of partition ids (len n_i each).
+    """
+
+    k: int
+    s: int
+    counts: tuple[int, ...]
+    partitions: tuple[tuple[int, ...], ...]
+
+    @property
+    def m(self) -> int:
+        return len(self.counts)
+
+    def holders(self, j: int) -> tuple[int, ...]:
+        """Workers holding partition ``j`` (exactly s+1 of them)."""
+        return tuple(i for i, ps in enumerate(self.partitions) if j in ps)
+
+    def support(self) -> np.ndarray:
+        return support_matrix(self)
+
+
+def proportional_counts(
+    k: int, s: int, c: Sequence[float], max_per_worker: int | None = None
+) -> np.ndarray:
+    """Integerized Eq. 5: ``n_i ∝ c_i`` with ``sum(n) = k*(s+1)``, ``n_i <= cap``.
+
+    Largest-remainder rounding; overflow beyond the per-worker cap is
+    re-distributed.  ``max_per_worker`` (default k) lets the trainer bound
+    load skew so elastic re-allocations never outgrow the fixed slot
+    capacity (shape stability => no recompilation); a binding cap costs a
+    bounded deviation from the Thm. 5 optimum, which we accept by design.
+    """
+    c = np.asarray(c, dtype=np.float64)
+    m = c.shape[0]
+    if m <= s:
+        raise ValueError(f"need m > s, got m={m}, s={s}")
+    if np.any(c <= 0):
+        raise ValueError("throughputs must be positive")
+    total = k * (s + 1)
+    cap = k if max_per_worker is None else min(k, int(max_per_worker))
+    if total > m * cap:
+        raise ValueError(f"k*(s+1)={total} copies cannot fit on m={m} workers with n_i<={cap}")
+
+    ideal = total * c / c.sum()
+    k = cap  # reuse the cap in the clamped rounding below
+    n = np.minimum(np.floor(ideal).astype(np.int64), k)
+    # Largest-remainder distribution of the leftover copies.
+    leftover = total - int(n.sum())
+    # remainder priority; workers already at cap k are ineligible.
+    remainder = ideal - np.floor(ideal)
+    order = np.argsort(-remainder, kind="stable")
+    idx = 0
+    while leftover > 0:
+        w = order[idx % m]
+        if n[w] < k:
+            n[w] += 1
+            leftover -= 1
+        idx += 1
+        if idx > 4 * m * (k + 1):  # pragma: no cover - guarded by feasibility check
+            raise RuntimeError("allocation failed to converge")
+    assert int(n.sum()) == total
+    return n
+
+
+def cyclic_assignment(k: int, counts: Sequence[int]) -> tuple[tuple[int, ...], ...]:
+    """Eq. 6: consecutive arcs on the partition circle.
+
+    Worker i gets partitions ``{(n'_i + 1) .. (n'_i + n_i)} mod k`` where
+    ``n'_i = sum_{j<i} n_j``.  Because the arcs are laid end-to-end and the
+    total length is ``k*(s+1)``, every partition is covered exactly ``s+1``
+    times, each time by a different worker (since ``n_i <= k``).
+    """
+    out: list[tuple[int, ...]] = []
+    start = 0
+    for n_i in counts:
+        if n_i > k:
+            raise ValueError(f"n_i={n_i} exceeds k={k}")
+        out.append(tuple((start + j) % k for j in range(n_i)))
+        start += int(n_i)
+    return tuple(out)
+
+
+def allocate(
+    k: int, s: int, c: Sequence[float], max_per_worker: int | None = None
+) -> Allocation:
+    """Full heterogeneity-aware allocation: Eq. 5 counts + Eq. 6 cyclic arcs."""
+    counts = proportional_counts(k, s, c, max_per_worker)
+    parts = cyclic_assignment(k, counts)
+    return Allocation(k=k, s=s, counts=tuple(int(x) for x in counts), partitions=parts)
+
+
+def uniform_allocation(k: int, s: int, m: int) -> Allocation:
+    """Homogeneous allocation (Tandon's cyclic scheme when k == m)."""
+    return allocate(k, s, [1.0] * m)
+
+
+def support_matrix(alloc: Allocation) -> np.ndarray:
+    """Boolean (m, k) support structure of B (Eq. 7)."""
+    sup = np.zeros((alloc.m, alloc.k), dtype=bool)
+    for i, ps in enumerate(alloc.partitions):
+        sup[i, list(ps)] = True
+    return sup

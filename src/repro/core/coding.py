@@ -1,0 +1,209 @@
+"""Gradient coding matrix construction (paper §IV, Alg. 1 + baselines).
+
+A *gradient coding strategy* is a matrix ``B ∈ R^{m×k}``: row ``b_i`` is both
+the set of partitions worker ``i`` computes (its support) and the linear
+encoding it applies before sending ``g̃_i = b_i · [g_1..g_k]^T``.
+
+``B`` is robust to any ``s`` stragglers iff for every subset ``I`` of
+``m−s`` workers, ``1_{1×k} ∈ span{b_i : i ∈ I}`` (Condition 1, Lemma 1).
+
+Alg. 1 (heter-aware): draw ``C ∈ R^{(s+1)×m}`` with i.i.d. U(0,1) entries
+(properties P1/P2 hold w.p. 1, Lemma 3).  For each partition ``j``, its
+``s+1`` holders index a square submatrix ``C_j``; embed ``d'_j = C_j^{-1}·1``
+into column ``j`` of ``B``.  Then ``C·B = 1_{(s+1)×k}`` and Condition 1 holds
+(Lemma 2); with the Eq. 5 allocation the strategy is optimal (Thm. 5):
+``T(B) = (s+1)·k / Σc_i``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import Allocation, allocate, uniform_allocation
+
+__all__ = [
+    "CodingScheme",
+    "build_heter_aware",
+    "build_cyclic",
+    "build_naive",
+    "build_fractional_repetition",
+    "make_scheme",
+    "satisfies_condition1",
+]
+
+# Re-draw C when any per-partition submatrix is ill-conditioned.  U(0,1)
+# draws satisfy P1/P2 w.p. 1 but can still be numerically nasty; the paper
+# ignores this, we don't.
+_COND_MAX = 1e8
+_MAX_REDRAWS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class CodingScheme:
+    """A complete gradient coding strategy.
+
+    Attributes:
+      name: scheme id ("heter_aware" | "group_based" | "cyclic" | "naive" |
+        "fractional_repetition").
+      B: (m, k) encoding matrix.  Row i = worker i's encoding coefficients.
+      allocation: the partition→worker assignment B's support came from.
+      s: designed straggler tolerance.
+      groups: optional tuple of worker-index tuples (group-based scheme only);
+        each group's partition sets tile the dataset exactly, so the group
+        decodes with an all-ones indicator vector.
+      C: the auxiliary matrix used by Alg.1 (None for naive/frs).
+    """
+
+    name: str
+    B: np.ndarray
+    allocation: Allocation
+    s: int
+    groups: tuple[tuple[int, ...], ...] = ()
+    C: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return self.B.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.B.shape[1]
+
+    def worker_load(self) -> np.ndarray:
+        """||b_i||_0 per worker (partitions computed per iteration)."""
+        return np.asarray(self.allocation.counts, dtype=np.int64)
+
+
+def _build_from_support(alloc: Allocation, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """Alg. 1 body: returns (B, C) with C·B = 1 for an arbitrary support whose
+    every partition has exactly ``s+1`` holders."""
+    m, k, s = alloc.m, alloc.k, alloc.s
+    holders = [alloc.holders(j) for j in range(k)]
+    for j, h in enumerate(holders):
+        if len(h) != s + 1:
+            raise ValueError(f"partition {j} has {len(h)} holders, expected s+1={s + 1}")
+    ones = np.ones(s + 1, dtype=np.float64)
+    for _ in range(_MAX_REDRAWS):
+        C = rng.uniform(size=(s + 1, m))
+        B = np.zeros((m, k), dtype=np.float64)
+        ok = True
+        for j, h in enumerate(holders):
+            Cj = C[:, list(h)]
+            if np.linalg.cond(Cj) > _COND_MAX:
+                ok = False
+                break
+            B[list(h), j] = np.linalg.solve(Cj, ones)
+        if ok:
+            return B, C
+    raise RuntimeError("could not draw a well-conditioned C")  # pragma: no cover
+
+
+def build_heter_aware(
+    k: int, s: int, c: Sequence[float], rng: np.random.Generator | int | None = 0,
+    max_load: int | None = None,
+) -> CodingScheme:
+    """Paper Alg. 1: heterogeneity-aware optimal gradient coding."""
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    alloc = allocate(k, s, c, max_load)
+    B, C = _build_from_support(alloc, rng)
+    return CodingScheme(name="heter_aware", B=B, allocation=alloc, s=s, C=C)
+
+
+def build_cyclic(m: int, s: int, rng: np.random.Generator | int | None = 0) -> CodingScheme:
+    """Tandon et al. cyclic scheme: k = m partitions, worker ``i`` holds the
+    OVERLAPPING window {i, i+1, ..., i+s} (mod m) — [12]'s support exactly.
+
+    Note this differs from Eq. 6's end-to-end arcs (which, for uniform c,
+    degenerate to a fractional-repetition-like structure that decodes from
+    fewer workers); the baselines must match the paper's cited scheme.
+    Coefficients come from the same Alg. 1 algebra (valid for any support
+    with s+1 holders per partition).
+    """
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    parts = tuple(tuple((i + j) % m for j in range(s + 1)) for i in range(m))
+    alloc = Allocation(k=m, s=s, counts=(s + 1,) * m, partitions=parts)
+    B, C = _build_from_support(alloc, rng)
+    return CodingScheme(name="cyclic", B=B, allocation=alloc, s=s, C=C)
+
+
+def build_naive(m: int) -> CodingScheme:
+    """Uncoded baseline: k = m, one partition per worker, zero tolerance."""
+    alloc = uniform_allocation(m, 0, m)
+    return CodingScheme(name="naive", B=np.eye(m, dtype=np.float64), allocation=alloc, s=0)
+
+
+def build_fractional_repetition(m: int, s: int) -> CodingScheme:
+    """Tandon's FRS: requires (s+1) | m.  m/(s+1) worker groups; group g's
+    s+1 workers all hold partition block g (k = m partitions, blocks of s+1),
+    encoding = plain sum (all-ones coefficients)."""
+    if m % (s + 1) != 0:
+        raise ValueError(f"fractional repetition needs (s+1) | m, got m={m}, s={s}")
+    k = m
+    n_groups = m // (s + 1)
+    block = k // n_groups  # == s+1
+    counts = [block] * m
+    parts = []
+    for i in range(m):
+        g = i // (s + 1)
+        parts.append(tuple(range(g * block, (g + 1) * block)))
+    alloc = Allocation(k=k, s=s, counts=tuple(counts), partitions=tuple(parts))
+    B = np.zeros((m, k), dtype=np.float64)
+    for i, ps in enumerate(parts):
+        B[i, list(ps)] = 1.0
+    groups = tuple(
+        tuple(range(g * (s + 1), (g + 1) * (s + 1))) for g in range(n_groups)
+    )
+    # each "group" here is a replication class: ANY single member decodes its
+    # block; the tiling groups (one worker per class) are what decode g.
+    tiling_groups = tuple(
+        tuple(g * (s + 1) + r for g in range(n_groups)) for r in range(s + 1)
+    )
+    del groups
+    return CodingScheme(
+        name="fractional_repetition", B=B, allocation=alloc, s=s, groups=tiling_groups
+    )
+
+
+def make_scheme(
+    name: str,
+    m: int,
+    k: int,
+    s: int,
+    c: Sequence[float] | None = None,
+    rng: np.random.Generator | int | None = 0,
+    max_load: int | None = None,
+) -> CodingScheme:
+    """Scheme factory used by trainer/benchmarks/CLI."""
+    c = list(c) if c is not None else [1.0] * m
+    if len(c) != m:
+        raise ValueError(f"len(c)={len(c)} != m={m}")
+    if name == "heter_aware":
+        return build_heter_aware(k, s, c, rng, max_load)
+    if name == "group_based":
+        from repro.core.groups import build_group_based
+
+        return build_group_based(k, s, c, rng, max_load)
+    if name == "cyclic":
+        return build_cyclic(m, s, rng)
+    if name == "naive":
+        return build_naive(m)
+    if name == "fractional_repetition":
+        return build_fractional_repetition(m, s)
+    raise ValueError(f"unknown scheme {name!r}")
+
+
+def satisfies_condition1(B: np.ndarray, s: int, atol: float = 1e-6) -> bool:
+    """Exhaustively check Condition 1 (Lemma 1) — every (m−s)-subset of rows
+    spans the all-ones vector.  Exponential; for tests with small m."""
+    m, k = B.shape
+    ones = np.ones(k)
+    for I in itertools.combinations(range(m), m - s):
+        rows = B[list(I)]
+        x, residuals, *_ = np.linalg.lstsq(rows.T, ones, rcond=None)
+        if not np.allclose(rows.T @ x, ones, atol=atol):
+            return False
+    return True

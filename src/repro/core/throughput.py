@@ -1,0 +1,75 @@
+"""Worker-throughput estimation (paper §III-C: "c_i ... estimated by sampling").
+
+Production behaviour at 1000+ nodes: chip SKUs are homogeneous but *observed*
+per-worker step times drift (preemption, host jitter, failing links,
+co-tenancy).  We keep an EWMA of partitions/second per worker and expose a
+hysteresis test so the trainer only re-runs allocation + Alg. 1 (a
+millisecond-scale host-side rebuild) when the estimate moved enough to
+matter.  This is the elastic-re-encode hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ThroughputEstimator"]
+
+
+@dataclasses.dataclass
+class ThroughputEstimator:
+    """EWMA estimate of per-worker throughput c_i (partitions/sec).
+
+    Args:
+      m: number of workers.
+      alpha: EWMA smoothing factor (weight of the newest sample).
+      rebalance_threshold: relative change in normalized c that triggers
+        ``should_rebalance()``.
+      init: optional prior throughputs (e.g. from a calibration pass).
+    """
+
+    m: int
+    alpha: float = 0.2
+    rebalance_threshold: float = 0.15
+    init: np.ndarray | None = None
+
+    def __post_init__(self) -> None:
+        self.c = (
+            np.asarray(self.init, dtype=np.float64).copy()
+            if self.init is not None
+            else np.ones(self.m, dtype=np.float64)
+        )
+        if self.c.shape != (self.m,):
+            raise ValueError(f"init shape {self.c.shape} != ({self.m},)")
+        self._last_applied = self.normalized()
+
+    def update(self, step_times: np.ndarray, loads: np.ndarray) -> None:
+        """Fold one iteration's observations in.
+
+        Args:
+          step_times: seconds each worker took (np.inf / nan for no report —
+            full stragglers are *not* folded into the estimate; transient
+            slowness is).
+          loads: partitions each worker computed this iteration (n_i).
+        """
+        step_times = np.asarray(step_times, dtype=np.float64)
+        loads = np.asarray(loads, dtype=np.float64)
+        valid = np.isfinite(step_times) & (step_times > 0) & (loads > 0)
+        sample = np.where(valid, loads / np.maximum(step_times, 1e-12), self.c)
+        self.c = (1 - self.alpha) * self.c + self.alpha * sample
+
+    def normalized(self) -> np.ndarray:
+        """c scaled so the slowest worker has throughput ~1."""
+        return self.c / max(self.c.min(), 1e-12)
+
+    def should_rebalance(self) -> bool:
+        """True when normalized estimates drifted past the hysteresis band."""
+        cur = self.normalized()
+        ref = self._last_applied
+        rel = np.abs(cur - ref) / np.maximum(ref, 1e-12)
+        return bool(rel.max() > self.rebalance_threshold)
+
+    def mark_applied(self) -> None:
+        """Call after re-running allocation with the current estimate."""
+        self._last_applied = self.normalized()

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticData, partition_batch_specs
+
+__all__ = ["SyntheticData", "partition_batch_specs"]

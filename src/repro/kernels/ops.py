@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels with impl switching.
+
+``impl``:
+  - "pallas":            compiled TPU kernel (the deployment target)
+  - "pallas_interpret":  kernel body interpreted on CPU (correctness runs)
+  - "xla":               the pure-jnp oracle (dry-run lowering path — Pallas
+                         TPU kernels do not lower to the CPU backend)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coded_reduce import coded_reduce_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def coded_reduce(g: jnp.ndarray, w: jnp.ndarray, impl: str = "pallas") -> jnp.ndarray:
+    if impl == "xla":
+        return ref.coded_reduce_ref(g, w)
+    return coded_reduce_pallas(g, w, interpret=(impl == "pallas_interpret"))
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, block_q=512, block_k=512, impl: str = "pallas"
+):
+    if impl == "xla":
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def ssd_scan(x, dA, Bm, Cm, *, chunk=128, impl: str = "pallas"):
+    if impl == "xla":
+        return ref.ssd_ref(x, dA, Bm, Cm)
+    return ssd_scan_pallas(x, dA, Bm, Cm, chunk=chunk, interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (independent algorithms where
+possible, so a kernel bug cannot hide in a shared implementation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coded_reduce_ref(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """g: (P, D), w: (P,) -> (D,)."""
+    return jnp.einsum("p,pd->d", w.astype(jnp.float32), g.astype(jnp.float32)).astype(g.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window: int | None = None,
+) -> jnp.ndarray:
+    """Unfused softmax attention with GQA.  q: (B,S,H,hd), k/v: (B,S,K,hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, S, K, G, hd) * (hd**-0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_ref(
+    x: jnp.ndarray, dA: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(S) sequential state-space recurrence — deliberately NOT the chunked
+    algorithm the kernel uses.  x: (B,S,H,P) pre-multiplied by dt."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dA[:, t]).astype(jnp.float32)
+        h = h * a[..., None, None] + jnp.einsum("bhp,bhn->bhpn", x[:, t].astype(jnp.float32), Bh[:, t])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

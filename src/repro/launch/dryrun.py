@@ -1,0 +1,428 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and extract roofline terms from the compiled artifact.
+
+The two lines above MUST run before any jax import (device count locks at
+backend init); this is why smoke tests / benches never import this module —
+they are supposed to see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --list
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh multi --out results/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, CodingConfig, TrainConfig, cell_runnable, get_config, runnable_cells
+from repro.core.aggregator import make_plan, slot_weights
+from repro.core.coding import make_scheme
+from repro.core.decoding import Decoder
+from repro.launch.mesh import coded_workers, data_axes, make_production_mesh
+from repro.models.lm import LM, build_model
+from repro.models.sharding import activation_axes
+from repro.optim.adam import adamw_init
+from repro.roofline.analysis import analyze_compiled
+from repro.train.steps import make_fused_train_step
+
+PyTree = Any
+
+# Per-arch training memory policy (see EXPERIMENTS.md §Dry-run): jamba-398B
+# needs bf16 optimizer moments, no f32 master, and 8-way grad accumulation to
+# fit 16 GiB/chip; everything else uses the full-precision default.
+_BIG = {"jamba-1.5-large-398b": dict(accum=4, state_dtype=jnp.bfloat16, master=False)}
+_TRAIN_POLICY_DEFAULT = dict(accum=1, state_dtype=jnp.float32, master=True)
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_tree(tree_shapes: PyTree, spec_tree: PyTree, mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, NamedSharding(mesh, p)),
+        tree_shapes, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _param_specs(model: LM, mesh, *, fsdp: bool):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = model.param_specs(tp_axis="model", tp_size=mesh.shape["model"])
+    if fsdp:
+        specs = model.fsdp_specs(shapes, specs, fsdp_axis="data", fsdp_size=mesh.shape["data"])
+    return shapes, specs
+
+
+def _sharded_bytes_per_chip(*trees) -> int:
+    """Per-chip resident bytes of sharded input trees, computed exactly from
+    each leaf's NamedSharding shard shape — the structural 'does persistent
+    state fit HBM' number (activations are the compiler's business; the
+    compiled temp figure is reported separately)."""
+    total = 0
+    for tree in trees:
+        for leaf in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+            if not isinstance(leaf, jax.ShapeDtypeStruct):
+                continue
+            sh = leaf.sharding
+            shard = sh.shard_shape(leaf.shape) if sh is not None else leaf.shape
+            total += int(np.prod(shard)) * leaf.dtype.itemsize
+    return total
+
+
+def _n_active_params(model: LM) -> float:
+    """Active params per token: MoE expert weights scaled by top_k/E."""
+    cfg = model.cfg
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    scale_moe = (cfg.top_k / cfg.n_experts) if cfg.n_experts else 1.0
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        n = float(np.prod(leaf.shape))
+        if "moe" in keys and any(k in ("w_gate", "w_up", "w_down") for k in keys):
+            n *= scale_moe
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(arch: str, shape_name: str, mesh, coding: CodingConfig | None = None,
+                dp=None, dp_size=None) -> dict:
+    """Shardable, weak-type-correct stand-ins (no device allocation) for the
+    step function of the given cell.  Returns kwargs for the lowering call."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    dp = dp if dp is not None else data_axes(mesh)
+    dp_size = dp_size if dp_size is not None else coded_workers(mesh)
+    bf16 = jnp.bfloat16
+
+    if shape.kind == "train":
+        coding = coding or CodingConfig()
+        m = dp_size
+        ppw = coding.partitions_per_worker
+        while m * ppw > shape.global_batch and ppw > 1:
+            ppw -= 1
+        k = m * ppw
+        part_mb = shape.global_batch // k
+        assert part_mb >= 1, (shape.global_batch, k)
+        n_slots = k * (coding.s + 1) // m  # headroom 1.0 for the dry-run
+        flat = m * n_slots * part_mb
+        dspec = NamedSharding(mesh, P(dp))
+        batch: dict[str, Any] = {}
+        if cfg.frontend == "audio":
+            batch["frames"] = _sds((flat, shape.seq_len, cfg.d_model), bf16, dspec)
+            batch["labels"] = _sds((flat, shape.seq_len), jnp.int32, dspec)
+        elif cfg.frontend == "vision":
+            text = shape.seq_len - cfg.n_patches
+            batch["patches"] = _sds((flat, cfg.n_patches, cfg.d_model), bf16, dspec)
+            batch["tokens"] = _sds((flat, text), jnp.int32, dspec)
+            batch["labels"] = _sds((flat, text), jnp.int32, dspec)
+        else:
+            batch["tokens"] = _sds((flat, shape.seq_len), jnp.int32, dspec)
+            batch["labels"] = _sds((flat, shape.seq_len), jnp.int32, dspec)
+        batch["weight"] = _sds((flat,), jnp.float32, dspec)
+        return {"batch": batch, "coded_tokens": flat * shape.seq_len,
+                "unique_tokens": shape.global_batch * shape.seq_len}
+
+    B = shape.global_batch
+    bspec = P(dp) if B % dp_size == 0 else P()
+    if shape.kind == "prefill":
+        batch: dict[str, Any] = {}
+        sh = NamedSharding(mesh, bspec)
+        if cfg.frontend == "audio":
+            batch["frames"] = _sds((B, shape.seq_len, cfg.d_model), bf16, sh)
+        elif cfg.frontend == "vision":
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model), bf16, sh)
+            batch["tokens"] = _sds((B, shape.seq_len - cfg.n_patches), jnp.int32, sh)
+        else:
+            batch["tokens"] = _sds((B, shape.seq_len), jnp.int32, sh)
+        return {"batch": batch, "tokens_processed": B * shape.seq_len}
+
+    # decode: one new token against a cache of seq_len
+    assert cfg.supports_decode
+    tok_spec = NamedSharding(mesh, bspec)
+    tokens = _sds((B, 1), jnp.int32, tok_spec)
+    cache_shapes = _decode_cache_shapes(model, B, shape.seq_len)
+    cache_specs = _cache_spec_tree(cache_shapes, mesh, dp, dp_size)
+    cache = _shard_tree(cache_shapes, cache_specs, mesh)
+    return {"tokens": tokens, "cache": cache, "tokens_processed": B}
+
+
+def _decode_cache_shapes(model: LM, B: int, cache_len: int) -> PyTree:
+    cfg = model.cfg
+    probe: dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        probe["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        probe["tokens"] = jax.ShapeDtypeStruct((B, 8), jnp.int32)
+    else:
+        probe["tokens"] = jax.ShapeDtypeStruct((B, 8), jnp.int32)
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    _, cache = jax.eval_shape(
+        partial(model.prefill, cache_len=cache_len), params_shapes, probe
+    )
+    return cache
+
+
+def _cache_spec_tree(cache_shapes: PyTree, mesh, dp, dp_size: int) -> PyTree:
+    tp = mesh.shape["model"]
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        shp = leaf.shape
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):  # (n_rep, B, S_c, K, hd)
+            dims = [None] * len(shp)
+            seq_ax = []
+            if shp[1] % dp_size == 0 and shp[1] >= dp_size:
+                dims[1] = dp if len(dp) > 1 else dp[0]
+            else:
+                seq_ax.extend(dp)
+            seq_ax.append("model")
+            div = int(np.prod([mesh.shape[a] for a in seq_ax]))
+            if shp[2] % div == 0 and shp[2] >= div:
+                dims[2] = tuple(seq_ax) if len(seq_ax) > 1 else seq_ax[0]
+            return P(*dims)
+        if name == "h":  # (n_rep, B, H, P, N)
+            dims = [None] * len(shp)
+            if shp[1] % dp_size == 0 and shp[1] >= dp_size:
+                dims[1] = dp if len(dp) > 1 else dp[0]
+            elif shp[2] % dp_size == 0:
+                dims[2] = dp if len(dp) > 1 else dp[0]
+            if dims[2] is None and shp[2] % tp == 0:
+                dims[2] = "model"
+            elif shp[4] % tp == 0:
+                dims[4] = "model"
+            return P(*dims)
+        if name == "conv":  # (n_rep, B, k-1, C)
+            dims = [None] * len(shp)
+            if shp[1] % dp_size == 0 and shp[1] >= dp_size:
+                dims[1] = dp if len(dp) > 1 else dp[0]
+            if shp[3] % tp == 0:
+                dims[3] = "model"
+            return P(*dims)
+        return P()
+
+    paths = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    leaves = [spec(p, l) for p, l in paths[0]]
+    return jax.tree_util.tree_unflatten(paths[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True,
+               variant: str = "baseline"):
+    """variant:
+      - "baseline": DP over data axes, TP over 'model', FSDP optimizer.
+      - "dp_all":   batch over EVERY mesh axis, params fully replicated —
+        for models too small to use tp=16 (beyond-paper §Perf lever).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        raise SystemExit(f"SKIP {arch} × {shape_name}: {why}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    n_active = _n_active_params(model)
+    if variant == "dp_all":
+        dp = tuple(mesh.axis_names)
+        dp_size = chips
+    else:
+        dp = data_axes(mesh)
+        dp_size = coded_workers(mesh)
+
+    t0 = time.time()
+    with activation_axes(dp, dp_size), mesh:
+        return _lower_cell_inner(
+            arch, shape_name, cfg, shape, mesh, mesh_name, chips, model, n_active, t0, verbose,
+            variant=variant, dp=dp, dp_size=dp_size,
+        )
+
+
+def _lower_cell_inner(arch, shape_name, cfg, shape, mesh, mesh_name, chips, model, n_active, t0,
+                      verbose, variant="baseline", dp=None, dp_size=None):
+    if shape.kind == "train":
+        policy = _BIG.get(arch, _TRAIN_POLICY_DEFAULT)
+        spec = input_specs(arch, shape_name, mesh, dp=dp, dp_size=dp_size)
+        if variant == "dp_all":
+            pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            pspecs = jax.tree.map(lambda s: P(), pshapes,
+                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            # replicated state must fit one chip: bf16 moments, no master,
+            # for anything past ~0.5B params (documented in EXPERIMENTS §Perf)
+            n_par = sum(float(np.prod(s.shape)) for s in jax.tree.leaves(
+                pshapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)))
+            if n_par > 5e8:
+                policy = dict(policy, state_dtype=jnp.bfloat16, master=False)
+        else:
+            pshapes, pspecs = _param_specs(model, mesh, fsdp=True)
+        params_in = _shard_tree(pshapes, pspecs, mesh)
+        opt_shapes = jax.eval_shape(
+            partial(adamw_init, state_dtype=policy["state_dtype"], keep_master=policy["master"]),
+            pshapes,
+        )
+        opt_specs = _opt_specs(opt_shapes, pspecs)
+        opt_in = _shard_tree(opt_shapes, opt_specs, mesh)
+        tc = TrainConfig()
+        step_fn = make_fused_train_step(model, tc, accum_steps=policy["accum"])
+        step_sds = _sds((), jnp.int32, NamedSharding(mesh, P()))
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(
+                    jax.tree.map(lambda x: x.sharding, params_in,
+                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                    jax.tree.map(lambda x: x.sharding, opt_in,
+                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                    jax.tree.map(lambda x: x.sharding, spec["batch"],
+                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)),
+                    NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(0, 1),
+            ).lower(params_in, opt_in, spec["batch"], step_sds)
+            compiled = lowered.compile()
+        model_flops = 6.0 * n_active * spec["unique_tokens"]
+    elif shape.kind == "prefill":
+        spec = input_specs(arch, shape_name, mesh, dp=dp, dp_size=dp_size)
+        fsdp = arch in _BIG
+        pshapes, pspecs = _param_specs(model, mesh, fsdp=fsdp)
+        params_in = _shard_tree(pshapes, pspecs, mesh)
+        if cfg.encoder_only:
+            fn = lambda p, b: model.forward(p, b)[0]
+        else:
+            fn = partial(model.prefill, cache_len=shape.seq_len)
+        with mesh:
+            lowered = jax.jit(fn).lower(params_in, spec["batch"])
+            compiled = lowered.compile()
+        model_flops = 2.0 * n_active * spec["tokens_processed"]
+    else:  # decode
+        spec = input_specs(arch, shape_name, mesh, dp=dp, dp_size=dp_size)
+        fsdp = arch in _BIG
+        pshapes, pspecs = _param_specs(model, mesh, fsdp=fsdp)
+        params_in = _shard_tree(pshapes, pspecs, mesh)
+        with mesh:
+            lowered = jax.jit(model.decode_step).lower(params_in, spec["tokens"], spec["cache"])
+            compiled = lowered.compile()
+        model_flops = 2.0 * n_active * spec["tokens_processed"]
+
+    compile_s = time.time() - t0
+    rep = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        model_flops=model_flops,
+    )
+    row = rep.row()
+    row["variant"] = variant
+    row["compile_s"] = compile_s
+    from repro.roofline.hlo_cost import compute_cost
+
+    row["top_shapes"] = [(k_, float(v)) for k_, v in compute_cost(compiled.as_text()).top_shapes(10)]
+    if shape.kind == "train":
+        row["state_bytes_per_chip"] = _sharded_bytes_per_chip(params_in, opt_in, spec["batch"])
+    elif shape.kind == "prefill":
+        row["state_bytes_per_chip"] = _sharded_bytes_per_chip(params_in, spec["batch"])
+    else:
+        row["state_bytes_per_chip"] = _sharded_bytes_per_chip(params_in, spec["cache"])
+    row["fits_16GiB_state"] = bool(row["state_bytes_per_chip"] < 16 * 2**30)
+    try:
+        ma = compiled.memory_analysis()
+        row["memory_analysis"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        if verbose:
+            print(f"memory_analysis: {row['memory_analysis']}")
+    except Exception as e:  # pragma: no cover
+        row["memory_analysis"] = {"error": str(e)}
+    if verbose:
+        ca = compiled.cost_analysis()
+        print(f"cost_analysis: flops={ca.get('flops'):.3e} bytes={ca.get('bytes accessed'):.3e}")
+        print(json.dumps({k: v for k, v in row.items() if k != "coll_breakdown"}, indent=1, default=str))
+        print("collectives:", row["coll_breakdown"])
+    return lowered, compiled, row
+
+
+def _opt_specs(opt_shapes, pspecs):
+    """AdamWState specs: moments/master mirror the param specs."""
+    from repro.optim.adam import AdamWState
+
+    return AdamWState(
+        step=P(),
+        mu=pspecs,
+        nu=pspecs,
+        master=None if opt_shapes.master is None else pspecs,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell json results")
+    ap.add_argument("--variant", default="baseline", choices=["baseline", "dp_all"])
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape in runnable_cells():
+            print(f"{arch} {shape}")
+        return
+
+    cells = runnable_cells() if args.all else [(args.arch, args.shape)]
+    multi = args.mesh == "multi"
+    for arch, shape in cells:
+        fn = None
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+            fn = os.path.join(args.out, f"{arch}__{shape}__{args.mesh}{suffix}.json")
+            if os.path.exists(fn):
+                print(f"skip (cached): {fn}", flush=True)
+                continue
+        print(f"=== dry-run {arch} × {shape} on {'2x16x16' if multi else '16x16'} ===", flush=True)
+        try:
+            _, _, row = lower_cell(arch, shape, multi_pod=multi, variant=args.variant)
+        except Exception as e:
+            print(f"FAILED {arch} × {shape}: {type(e).__name__}: {e}", flush=True)
+            continue
+        if fn:
+            with open(fn, "w") as f:
+                json.dump(row, f, indent=1, default=str)
+            print(f"wrote {fn}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

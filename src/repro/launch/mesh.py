@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first backend init —
+dryrun.py must set XLA_FLAGS before this runs).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips).
+
+    Axes: 'pod' (DCN boundary — the realistic gradient-coding axis, see
+    DESIGN.md §3), 'data' (DP / coded workers / FSDP), 'model' (TP/EP)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The coded-worker axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def coded_workers(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))

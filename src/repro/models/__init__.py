@@ -1,0 +1,1 @@
+"""Model zoo (lm assembly imported lazily until lm.py lands)."""

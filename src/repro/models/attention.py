@@ -1,0 +1,193 @@
+"""GQA attention: chunked (flash-style) training/prefill + cached decode.
+
+Pure-jnp implementation (the XLA path used for dry-runs and CPU tests); the
+Pallas flash kernel in kernels/flash_attention is a drop-in for the TPU
+target and is validated against this module's math.
+
+Key properties:
+  - q-chunked scan keeps live memory at O(S·chunk) instead of O(S²);
+  - GQA via grouped einsum (no materialized head replication);
+  - sliding-window (mixtral/jamba) masks in train/prefill and uses a
+    RING-BUFFER cache of size `window` in decode, so a 500k-token stream
+    needs a 4k-entry cache — this is what makes `long_500k` sub-quadratic
+    for SWA archs;
+  - all softmax math in f32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.models.sharding import shard_batch
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+def init_attention(
+    rng: jax.Array, d: int, n_heads: int, n_kv: int, head_dim: int, qkv_bias: bool, dtype
+) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(k1, (d, n_heads * head_dim), dtype),
+        "wk": dense_init(k2, (d, n_kv * head_dim), dtype),
+        "wv": dense_init(k3, (d, n_kv * head_dim), dtype),
+        "wo": dense_init(k4, (n_heads * head_dim, d), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"] + (params["bq"] if "bq" in params else 0)
+    k = x @ params["wk"] + (params["bk"] if "bk" in params else 0)
+    v = x @ params["wv"] + (params["bv"] if "bv" in params else 0)
+    return (
+        q.reshape(B, S, n_heads, head_dim),
+        k.reshape(B, S, n_kv, head_dim),
+        v.reshape(B, S, n_kv, head_dim),
+    )
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, K, G, hd), k: (B, Sk, K, hd) -> (B, K, G, Sq, Sk) in f32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B, K, G, Sq, Sk) f32, v: (B, Sk, K, hd) -> (B, Sq, K*G*hd)."""
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    B, Sq = o.shape[0], o.shape[1]
+    return o.reshape(B, Sq, -1)
+
+
+def attention_forward(
+    params: PyTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rotary_dim: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 512,
+    return_cache: bool = False,
+    cache_len: int | None = None,
+) -> tuple[jnp.ndarray, PyTree | None]:
+    """Train/prefill attention. x: (B, S, d); positions: (S,) or (B, S).
+
+    ``cache_len`` pads the returned full-attention cache to the serving
+    max length (ignored for SWA archs, whose ring is always ``window``).
+    """
+    B, S, _ = x.shape
+    G = n_heads // n_kv
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    pos = jnp.broadcast_to(positions, (B, S)) if positions.ndim == 1 else positions
+    q = apply_rope(q, pos, rotary_dim=rotary_dim, theta=rope_theta)
+    k = apply_rope(k, pos, rotary_dim=rotary_dim, theta=rope_theta)
+    # anchor the batch dim: GSPMD loses it through the q-chunk scan otherwise
+    q, k, v = shard_batch(q), shard_batch(k), shard_batch(v)
+    q = q.reshape(B, S, n_kv, G, head_dim) * (head_dim**-0.5)
+
+    kpos = pos[0]  # positions identical across batch in this framework
+
+    def qblock(carry, inp):
+        qb, qpos = inp  # (B, C, K, G, hd), (C,)
+        s = _gqa_scores(qb, k)  # (B, K, G, C, S)
+        mask = jnp.ones((qpos.shape[0], S), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return carry, shard_batch(_gqa_out(p, v))
+
+    if S % q_chunk == 0 and S > q_chunk:
+        nb = S // q_chunk
+        qb = q.reshape(B, nb, q_chunk, n_kv, G, head_dim).transpose(1, 0, 2, 3, 4, 5)
+        qb = shard_batch(qb, dim=1)
+        pb = kpos.reshape(nb, q_chunk)
+        _, outs = jax.lax.scan(qblock, None, (qb, pb))
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, n_heads * head_dim)
+    else:
+        _, out = qblock(None, (q, kpos))
+    out = out @ params["wo"]
+
+    cache = None
+    if return_cache:
+        if window is not None:
+            # ring buffer: keep only the last `window` keys, slot = pos % window
+            W = window
+            kc = jnp.zeros((B, W, n_kv, head_dim), k.dtype)
+            vc = jnp.zeros((B, W, n_kv, head_dim), v.dtype)
+            take = jnp.minimum(S, W)
+            src_idx = jnp.arange(W) + jnp.maximum(S - W, 0)  # last W positions
+            ksrc = jnp.take(k, jnp.minimum(src_idx, S - 1), axis=1)
+            vsrc = jnp.take(v, jnp.minimum(src_idx, S - 1), axis=1)
+            slots = (kpos[-1] + 1 - take + jnp.arange(W)) % W
+            kc = kc.at[:, slots].set(ksrc)
+            vc = vc.at[:, slots].set(vsrc)
+            cache = {"k": kc, "v": vc}
+        else:
+            pad = (cache_len or S) - S
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache = {"k": kc, "v": vc}
+    return out, cache
+
+
+def attention_decode(
+    params: PyTree,
+    x: jnp.ndarray,
+    cache: PyTree,
+    pos: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rotary_dim: int,
+    rope_theta: float,
+    window: int | None = None,
+) -> tuple[jnp.ndarray, PyTree]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (current position).
+
+    cache["k"/"v"]: (B, S_cache, K, hd) — S_cache is the ring size for SWA
+    archs and the max sequence length otherwise.
+    """
+    B = x.shape[0]
+    G = n_heads // n_kv
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    posb = jnp.broadcast_to(pos[None], (B, 1))
+    q = apply_rope(q, posb, rotary_dim=rotary_dim, theta=rope_theta)
+    k = apply_rope(k, posb, rotary_dim=rotary_dim, theta=rope_theta)
+
+    S_c = cache["k"].shape[1]
+    slot = pos % S_c if window is not None else pos
+    kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    qh = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
+    s = _gqa_scores(qh, kc)  # (B, K, G, 1, S_c)
+    idx = jnp.arange(S_c)
+    if window is not None:
+        # ring size == window: before wrap, slot i holds position i (valid iff
+        # i <= pos); after wrap every slot holds one of the last S_c positions.
+        valid = (idx <= pos) | (pos >= S_c)
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _gqa_out(p, vc) @ params["wo"]
+    return out, {"k": kc, "v": vc}

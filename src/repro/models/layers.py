@@ -1,0 +1,102 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, initializers.
+
+Everything is a pure function over explicit parameter pytrees (no flax in the
+environment); params are plain dicts of jnp arrays, which keeps checkpointing
+and sharding-spec derivation trivial.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng: jax.Array, shape: tuple[int, ...], dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-ish, standard for LLM stacks)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng: jax.Array, shape: tuple[int, ...], dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * weight.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(rotary_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension (rotary_dim <= head_dim)."""
+    assert rotary_dim % 2 == 0
+    exponents = jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim
+    return 1.0 / (theta**exponents)  # (rotary_dim/2,)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    rotary_dim: int,
+    theta: float,
+) -> jnp.ndarray:
+    """Rotate the first ``rotary_dim`` dims of the head dimension.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S).
+    rotary_dim == hd is standard llama RoPE; rotary_dim == hd//2 is the
+    chatglm "2d" variant (half the dims carry position, half don't).
+    """
+    rot, keep = x[..., :rotary_dim], x[..., rotary_dim:]
+    inv = rope_frequencies(rotary_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, rot/2)
+    x1, x2 = rot[..., : rotary_dim // 2], rot[..., rotary_dim // 2 :]
+    r1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin).astype(x.dtype)
+    r2 = (x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin).astype(x.dtype)
+    return jnp.concatenate([r1, r2, keep], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng: jax.Array, d: int, ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), dtype),
+        "w_up": dense_init(k2, (d, ff), dtype),
+        "w_down": dense_init(k3, (ff, d), dtype),
+    }
+
+
+def mlp(params: PyTree, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g = a(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch avoids the O(T·E·C) one-hot tensors of the classic GShard einsum
+formulation: token→expert assignments are sorted by expert id, positions
+within each expert are computed from the sorted order, tokens beyond the
+per-expert capacity are dropped (combine weight 0), and expert FFNs run as
+batched (E, C, d) matmuls — the form EP shards cleanly over the 'model' axis
+(expert axis when E % tp == 0, else the ff axis within each expert; see
+configs/base.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+PyTree = Any
+
+
+def init_moe(rng: jax.Array, d: int, n_experts: int, ff: int, dtype) -> PyTree:
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "router": dense_init(k0, (d, n_experts), jnp.float32, scale=0.02),
+        "w_gate": dense_init(k1, (n_experts, d, ff), dtype),
+        "w_up": dense_init(k2, (n_experts, d, ff), dtype),
+        "w_down": dense_init(k3, (n_experts, ff, d), dtype),
+    }
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int, capacity_factor: float) -> int:
+    c = int(n_tokens * top_k * capacity_factor / n_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU lane alignment
+
+
+def moe_apply_dense(
+    params: PyTree,
+    x: jnp.ndarray,  # (T, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """GShard-style dense one-hot dispatch (no sort/scatter).
+
+    Sort-based dispatch (``moe_apply``) is leaner on paper, but batched
+    sort/scatter defeat GSPMD sharding propagation — the dry-run measured the
+    expert matmuls running on the *full replicated batch* per chip (4× flops,
+    huge all-gathers).  The dense formulation uses only one_hot/cumsum/einsum,
+    all of which propagate shardings cleanly; the (T·K, E, C) dispatch mask is
+    fusion-friendly and never carries model-width d.  Numerically identical
+    to ``moe_apply`` (property-tested).
+    """
+    T, d = x.shape
+    E = params["router"].shape[1]
+    C = moe_capacity(T, E, top_k, capacity_factor)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # (T, K, E)
+    comb = onehot.reshape(T * top_k, E)  # priority order: (t, k) — matches sort impl
+    pos = jnp.cumsum(comb, axis=0) - comb
+    pos_sel = jnp.sum(pos * comb, axis=-1)  # (T*K,) position within chosen expert
+    keep = (pos_sel < C).astype(jnp.float32)
+    poh = jax.nn.one_hot(pos_sel, C, dtype=jnp.float32) * keep[:, None]  # (T*K, C)
+    disp = (comb[:, :, None] * poh[:, None, :]).reshape(T, top_k, E, C)
+
+    # storage dtype follows x (bf16 at scale): MXU accumulation is f32 via
+    # preferred_element_type, but tensors crossing HBM / TP collectives stay
+    # half-width — measured 2x on jamba's dominant all-reduce (§Perf)
+    f32 = jnp.float32
+    dd = x.dtype
+    xe = jnp.einsum("tkec,td->ecd", disp.astype(dd), x, preferred_element_type=f32).astype(dd)
+    h = a(
+        jnp.einsum("ecd,edf->ecf", xe, params["w_gate"], preferred_element_type=f32)
+    ) * jnp.einsum("ecd,edf->ecf", xe, params["w_up"], preferred_element_type=f32)
+    ye = jnp.einsum("ecf,efd->ecd", h.astype(dd), params["w_down"], preferred_element_type=f32).astype(dd)
+    y = jnp.einsum("tkec,ecd,tk->td", disp.astype(dd), ye, gate_vals.astype(dd),
+                   preferred_element_type=f32)
+    return y.astype(x.dtype), aux
+
+
+def moe_apply(
+    params: PyTree,
+    x: jnp.ndarray,  # (T, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (T, d), aux_loss scalar — load-balance loss, Switch-style)."""
+    T, d = x.shape
+    E = params["router"].shape[1]
+    C = moe_capacity(T, E, top_k, capacity_factor)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch Transformer eq. 4)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    flat_e = expert_ids.reshape(-1)  # (T*K,)
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    order = jnp.argsort(flat_e, stable=True)  # group by expert
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    # position of each routed token within its expert
+    counts = jnp.bincount(flat_e, length=E)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * top_k) - starts[se]
+    keep = pos < C
+    slot = se * C + jnp.where(keep, pos, 0)  # dropped tokens scatter to slot 0 w/ weight 0
+
+    # gather token features into (E*C, d) expert buffers; dropped tokens
+    # scatter out-of-bounds and are discarded by mode="drop"
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C)].add(x[st].astype(x.dtype), mode="drop")
+    xe = buf.reshape(E, C, d)
+
+    h = a(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, params["w_up"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(E * C, d)
+
+    # combine back: y[t] = Σ_k gate * expert_out
+    contrib = jnp.where(keep[:, None], ye[slot] * sg[:, None].astype(ye.dtype), 0)
+    y = jnp.zeros((T, d), ye.dtype).at[st].add(contrib)
+    return y.astype(x.dtype), aux

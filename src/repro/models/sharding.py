@@ -1,0 +1,48 @@
+"""Activation-sharding anchors.
+
+GSPMD propagates shardings from inputs/params, but propagation can fail
+through reshape→transpose→scan chains (observed: the attention q-chunk scan
+fell back to full batch replication per chip — caught by the dry-run's
+roofline, 16× flops blowup + 71 GB/chip of all-gather).  These helpers pin
+the batch dimension of activations to the data axes at key points.  They
+no-op unless the launcher installs axes, so CPU tests and single-device
+paths are untouched.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_AXES: tuple[str, ...] | None = None
+_ACT_SIZE: int = 1
+
+
+def set_activation_axes(axes: Sequence[str] | None, size: int = 1) -> None:
+    global _ACT_AXES, _ACT_SIZE
+    _ACT_AXES = tuple(axes) if axes else None
+    _ACT_SIZE = size
+
+
+@contextlib.contextmanager
+def activation_axes(axes: Sequence[str] | None, size: int = 1):
+    global _ACT_AXES, _ACT_SIZE
+    prev, prev_size = _ACT_AXES, _ACT_SIZE
+    set_activation_axes(axes, size)
+    try:
+        yield
+    finally:
+        _ACT_AXES, _ACT_SIZE = prev, prev_size
+
+
+def shard_batch(x: jax.Array, dim: int = 0) -> jax.Array:
+    """Constrain dim ``dim`` of x to the data axes (no-op if unset or if the
+    dim isn't divisible by the axes' total size)."""
+    if _ACT_AXES is None or x.shape[dim] % _ACT_SIZE != 0 or x.shape[dim] < _ACT_SIZE:
+        return x
+    spec: list = [None] * x.ndim
+    spec[dim] = _ACT_AXES if len(_ACT_AXES) > 1 else _ACT_AXES[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))

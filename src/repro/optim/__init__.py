@@ -1,0 +1,4 @@
+from repro.optim.adam import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_warmup"]

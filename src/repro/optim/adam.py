@@ -1,0 +1,94 @@
+"""AdamW, hand-rolled (no optax in the environment).
+
+Mixed-precision discipline: moments and master weights are f32 regardless of
+the (typically bf16) param dtype; ``state_dtype`` lets huge models (jamba)
+drop moments to bf16 to fit HBM — roofline consequences discussed in
+EXPERIMENTS.md.  State is a pytree mirroring params, so the FSDP sharding
+specs from ``LM.fsdp_specs`` apply leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray  # () int32
+    mu: PyTree  # first moment
+    nu: PyTree  # second moment
+    master: PyTree | None  # f32 master weights (None when params are f32)
+
+
+def adamw_init(params: PyTree, state_dtype=jnp.float32, keep_master: bool | None = None) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    if keep_master is None:
+        keep_master = any(p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) if keep_master else None
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def global_norm(grads: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: AdamWState,
+    *,
+    lr: jnp.ndarray | float,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 0.0,
+) -> tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    if grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gn + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - beta1 ** step.astype(jnp.float32)
+    c2 = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        g32 = g.astype(jnp.float32)
+        m = (beta1 * m.astype(jnp.float32) + (1 - beta1) * g32).astype(m.dtype)
+        v = (beta2 * v.astype(jnp.float32) + (1 - beta2) * jnp.square(g32)).astype(v.dtype)
+        mhat = m.astype(jnp.float32) / c1
+        vhat = v.astype(jnp.float32) / c2
+        base = (w if w is not None else p).astype(jnp.float32)
+        neww = base - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * base)
+        return neww.astype(p.dtype), m, v, neww
+
+    masters = state.master if state.master is not None else jax.tree.map(lambda _: None, params)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_w = jax.tree.leaves(state.master) if state.master is not None else [None] * len(flat_p)
+    del masters
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_w = (
+        jax.tree.unflatten(tdef, [o[3] for o in out]) if state.master is not None else None
+    )
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v, master=new_w)

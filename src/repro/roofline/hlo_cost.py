@@ -1,0 +1,302 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring
+trip count (verified empirically: a 7-iteration scanned matmul reports 1/7th
+of the unrolled flops).  Every model here scans over layers (and microbatch
+accumulation / attention q-chunks), so XLA's numbers undercount by 10-100×.
+
+This module walks the compiled HLO text itself:
+
+  - ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    body (and condition) costs are multiplied by the trip count, recursively;
+  - ``fusion``/``call``/``conditional`` recurse into called computations;
+  - dot flops = 2 · numel(result) · K  (K = product of lhs contracting dims,
+    read from the operand's type and the ``lhs_contracting_dims`` attribute);
+  - bytes are counted at *fusion boundaries* only (operands + results of
+    top-level instructions; intermediates inside a fused computation never
+    touch HBM) — closer to the TPU execution model than XLA-CPU's unfused
+    per-op accounting;
+  - collective bytes = operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (plain and ``-start``
+    forms; ``-done`` skipped), multiplied through enclosing loops.
+
+All numbers are per-device: the text is the SPMD-partitioned module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "iota",
+    "after-all", "custom-call", "partition-id", "replica-id",
+}
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+_OPCODE_RE = re.compile(r"^\s*([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _numel_bytes(type_str: str) -> tuple[int, int]:
+    """(numel, bytes) summed over all array shapes in a (possibly tuple) type."""
+    numel = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+def _shape_key(type_str: str) -> str:
+    m = _SHAPE_RE.search(type_str)
+    return f"{m.group(1)}[{m.group(2)}]" if m else "other"
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    rest: str  # attribute tail
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(default_factory=dict)
+    # result-shape -> bytes written at fusion boundaries; attributes the
+    # memory term to tensor families (e.g. attention scores) for perf work
+    by_shape: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.by_shape.items():
+            self.by_shape[k] = self.by_shape.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def top_shapes(self, n: int = 12) -> list[tuple[str, float]]:
+        return sorted(self.by_shape.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _split_args_types(arg_str: str) -> list[str]:
+    """Split 'a: f32[2,3], b: (f32[4], s32[])' on top-level commas."""
+    out, depth, cur = [], 0, []
+    for ch in arg_str:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [a.strip() for a in out if a.strip()]
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur_name: str | None = None
+    cur: list[Instr] = []
+    for line in hlo_text.splitlines():
+        if cur_name is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and "->" in line:
+                cur_name = m.group(1)
+                cur = []
+            continue
+        if line.startswith("}"):
+            comps[cur_name] = cur
+            cur_name = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs = "TYPE opcode(operands), attrs"
+        om = None
+        depth = 0
+        # find the opcode: first " word(" at bracket depth 0 after the type
+        i = 0
+        while i < len(rhs):
+            ch = rhs[i]
+            if ch in "([{":
+                # check if preceded by an opcode word at depth 0
+                if ch == "(" and depth == 0:
+                    j = i - 1
+                    while j >= 0 and (rhs[j].isalnum() or rhs[j] in "-_"):
+                        j -= 1
+                    word = rhs[j + 1 : i]
+                    if word and word[0].isalpha() and word.islower():
+                        om = (j + 1, i, word)
+                        break
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            i += 1
+        if om is None:
+            continue
+        start, paren, opcode = om
+        type_str = rhs[:start].strip()
+        # operands: up to matching close paren
+        depth, j = 1, paren + 1
+        while j < len(rhs) and depth:
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+            j += 1
+        args = rhs[paren + 1 : j - 1]
+        rest = rhs[j:]
+        operands = _OPERAND_RE.findall(args)
+        cur.append(Instr(name=name, type_str=type_str, opcode=opcode, operands=operands, rest=rest))
+    return comps
+
+
+def _instr_flops(ins: Instr, types: dict[str, str]) -> float:
+    out_numel, _ = _numel_bytes(ins.type_str)
+    if ins.opcode == "dot":
+        k = 1
+        mc = _LHS_CONTRACT_RE.search(ins.rest)
+        lhs_t = types.get(ins.operands[0], "") if ins.operands else ""
+        dims = _shape_dims(lhs_t)
+        if mc and dims:
+            for d in mc.group(1).split(","):
+                if d:
+                    k *= dims[int(d)]
+        return 2.0 * out_numel * k
+    if ins.opcode in ("convolution",):
+        # not used by the zoo's dry-run path; crude fallback
+        return 2.0 * out_numel
+    if ins.opcode in ("reduce", "reduce-window"):
+        in_numel = max((_numel_bytes(types.get(o, ""))[0] for o in ins.operands), default=out_numel)
+        return float(in_numel)
+    if ins.opcode in _SKIP_BYTES_OPS or ins.opcode in ("copy", "while", "fusion", "call", "conditional"):
+        return 0.0
+    return float(out_numel)  # elementwise-ish
+
+
+def compute_cost(hlo_text: str) -> Cost:
+    comps = parse_computations(hlo_text)
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # break cycles defensively
+        instrs = comps.get(name, [])
+        types = {i.name: i.type_str for i in instrs}
+        c = Cost()
+        for ins in instrs:
+            op = ins.opcode
+            if op == "while":
+                trips = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                if body:
+                    c.add(comp_cost(body.group(1)), trips)
+                if cond:
+                    c.add(comp_cost(cond.group(1)), trips + 1)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                mcall = _CALLS_RE.search(ins.rest)
+                if mcall:
+                    sub = comp_cost(mcall.group(1))
+                    c.flops += sub.flops
+                    for kk, vv in sub.coll.items():
+                        c.coll[kk] = c.coll.get(kk, 0.0) + vv
+                # bytes at the fusion boundary:
+                _, out_b = _numel_bytes(ins.type_str)
+                in_b = sum(_numel_bytes(types.get(o, ""))[1] for o in ins.operands)
+                c.bytes += out_b + in_b
+                key = _shape_key(ins.type_str)
+                c.by_shape[key] = c.by_shape.get(key, 0.0) + out_b + in_b
+                continue
+            if op == "conditional":
+                mb = _BRANCHES_RE.search(ins.rest)
+                if mb:
+                    subs = [comp_cost(b.strip().lstrip("%")) for b in mb.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        c.add(best)
+                continue
+            # collectives
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                in_b = sum(_numel_bytes(types.get(o, ""))[1] for o in ins.operands)
+                if in_b == 0:
+                    in_b = _numel_bytes(ins.type_str)[1]
+                c.coll[base] = c.coll.get(base, 0.0) + in_b
+                c.bytes += in_b + _numel_bytes(ins.type_str)[1]
+                continue
+            c.flops += _instr_flops(ins, types)
+            if op not in _SKIP_BYTES_OPS:
+                _, out_b = _numel_bytes(ins.type_str)
+                in_b = sum(_numel_bytes(types.get(o, ""))[1] for o in ins.operands)
+                c.bytes += out_b + in_b
+                key = _shape_key(ins.type_str)
+                c.by_shape[key] = c.by_shape.get(key, 0.0) + out_b + in_b
+        memo[name] = c
+        return c
+
+    # entry computation: the one named in "ENTRY %name" line
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_cost(entry)

@@ -1,0 +1,4 @@
+from repro.train.trainer import CodedTrainer, TrainerState
+from repro.train.serve import LMServer
+
+__all__ = ["CodedTrainer", "TrainerState", "LMServer"]

@@ -1,0 +1,46 @@
+"""Batched serving: jitted prefill + decode loop with KV/SSM caches.
+
+Gradient coding is a training-time technique; serving exists because the
+assigned shape grid includes prefill/decode cells, and because a framework
+that trains models should also be able to run them.  ``LMServer.generate``
+drives greedy decoding over a batch of (padded) requests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+PyTree = Any
+
+
+class LMServer:
+    def __init__(self, model: LM):
+        if model.cfg.encoder_only:
+            raise ValueError(f"{model.cfg.name} is encoder-only; no decode step")
+        self.model = model
+        self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(
+        self, params: PyTree, batch: PyTree, max_new_tokens: int,
+        cache_len: int | None = None,
+    ) -> np.ndarray:
+        """Greedy decode.  batch: model inputs (tokens (B, S) etc.).
+        Returns (B, max_new_tokens) int32."""
+        S = batch["tokens"].shape[1] if "tokens" in batch else batch["frames"].shape[1]
+        cache_len = cache_len or (S + max_new_tokens)
+        logits, cache = self._prefill(params, batch, cache_len=cache_len)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for _ in range(max_new_tokens):
+            outs.append(np.asarray(tok[:, 0]))
+            logits, cache = self._decode(params, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return np.stack(outs, axis=1)

@@ -1,0 +1,58 @@
+"""Jit-ready step functions shared by the trainer, dry-run, and benchmarks.
+
+``make_fused_train_step`` is the production coded training step: weighted
+fwd/bwd (the encode+decode live in ``batch["weight"]``, see
+core/aggregator.py) + AdamW.  ``accum_steps`` > 1 runs sequential microbatch
+chunks with f32 gradient accumulation — both a memory lever (remat boundary
+activations live only for one chunk) and a compute/comm overlap lever (XLA
+overlaps chunk i's bwd with chunk i-1's reductions).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.lm import LM
+from repro.optim.adam import adamw_update, global_norm
+from repro.optim.schedules import cosine_warmup
+
+PyTree = Any
+
+
+def make_fused_train_step(model: LM, tc: TrainConfig, accum_steps: int = 1):
+    def loss_fn(params, batch):
+        return model.weighted_loss(params, batch)
+
+    def step_fn(params, opt, batch, step):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+            chunks = jax.tree.map(split, batch)
+
+            def acc(carry, chunk):
+                l, g = jax.value_and_grad(loss_fn)(params, chunk)
+                loss, grads = carry
+                return (loss + l, jax.tree.map(lambda a, b: a + b.astype(jnp.float32), grads, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero), chunks)
+
+        lr = cosine_warmup(
+            step, base_lr=tc.lr, warmup_steps=tc.warmup_steps, total_steps=tc.total_steps
+        )
+        gnorm = global_norm(grads)
+        params, opt = adamw_update(
+            params, grads, opt,
+            lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+        )
+        return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step_fn

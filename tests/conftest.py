@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — unit/smoke tests
+must see the real single CPU device; multi-device SPMD tests run in
+subprocesses (tests/spmd_driver.py) with their own device-count flag."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,167 @@
+"""Multi-device SPMD checks, run as a subprocess with fake devices so the
+main pytest process keeps its single real CPU device.
+
+Usage: python tests/spmd_driver.py <check_name>
+Exits 0 on success; prints diagnostics on failure.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import AxisType, NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def _toy():
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"])
+        return jnp.mean((h @ params["w2"])[:, 0] - batch["y"]) ** 2 + jnp.mean(
+            ((h @ params["w2"])[:, 0] - batch["y"]) ** 2
+        )
+
+    r = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(r.normal(size=(4, 16)), jnp.float32),
+        "w2": jnp.asarray(r.normal(size=(16, 1)), jnp.float32),
+    }
+    return loss_fn, params, r
+
+
+def check_faithful_spmd():
+    from repro.core import Decoder, build_heter_aware
+    from repro.core.aggregator import faithful_spmd_step, make_plan, pack_coded_batch
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    loss_fn, params, r = _toy()
+    params = jax.device_put(
+        params,
+        {"w1": NamedSharding(mesh, P(None, "model")), "w2": NamedSharding(mesh, P("model", None))},
+    )
+    k, s, mb = 8, 1, 2
+    scheme = build_heter_aware(k, s, [1, 2, 3, 2], rng=0)
+    pb = {
+        "x": jnp.asarray(r.normal(size=(k, mb, 4)), jnp.float32),
+        "y": jnp.asarray(r.normal(size=(k, mb)), jnp.float32),
+    }
+    plan = make_plan(scheme)
+    a = Decoder(scheme).decode_vector([0, 2, 3]) / k
+    sb = jax.device_put(pack_coded_batch(pb, plan), NamedSharding(mesh, P("data")))
+    coeff = jax.device_put(jnp.asarray(plan.slot_coeff * plan.slot_mask), NamedSharding(mesh, P("data")))
+    a_dev = jax.device_put(jnp.asarray(a, jnp.float32), NamedSharding(mesh, P("data")))
+    err = jax.tree.map(lambda p: jnp.zeros((4,) + p.shape, jnp.float32), params)
+    err = jax.device_put(err, NamedSharding(mesh, P("data")))
+
+    gt = jax.tree.map(jnp.zeros_like, params)
+    for j in range(k):
+        g = jax.grad(loss_fn)(params, jax.tree.map(lambda x: x[j], pb))
+        gt = jax.tree.map(lambda A, b: A + b / k, gt, g)
+
+    step = jax.jit(faithful_spmd_step(loss_fn, mesh, ("data",), compress=False))
+    grads, _ = step(params, sb, coeff, a_dev, err)
+    for x, y in zip(jax.tree.leaves(grads), jax.tree.leaves(gt)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+    # compressed wire format stays close + error feedback is populated
+    step_c = jax.jit(faithful_spmd_step(loss_fn, mesh, ("data",), compress=True))
+    gc, err2 = step_c(params, sb, coeff, a_dev, err)
+    rel = max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))) / (np.max(np.abs(np.asarray(y))) + 1e-9))
+        for x, y in zip(jax.tree.leaves(gc), jax.tree.leaves(gt))
+    )
+    assert rel < 0.05, rel
+    assert any(float(np.abs(np.asarray(e)).max()) > 0 for e in jax.tree.leaves(err2))
+    print("faithful_spmd ok")
+
+
+def check_fused_sharded_equals_host():
+    """The production fused step gives identical grads on a sharded mesh and
+    on the host (single device)."""
+    from repro.core import Decoder, build_heter_aware
+    from repro.core.aggregator import fused_coded_value_and_grad, make_plan, pack_coded_batch, slot_weights
+
+    loss_fn, params, r = _toy()
+    k = 8
+    scheme = build_heter_aware(k, 1, [1, 2, 3, 2], rng=0)
+    pb = {
+        "x": jnp.asarray(r.normal(size=(k, 2, 4)), jnp.float32),
+        "y": jnp.asarray(r.normal(size=(k, 2)), jnp.float32),
+    }
+    plan = make_plan(scheme)
+    w = jnp.asarray(slot_weights(plan, Decoder(scheme).decode_vector([1, 2, 3])))
+    sb = pack_coded_batch(pb, plan)
+    vg = jax.jit(fused_coded_value_and_grad(loss_fn))
+    _, g_host = vg(params, sb, w)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    sb_sh = jax.device_put(sb, NamedSharding(mesh, P("data")))
+    w_sh = jax.device_put(w, NamedSharding(mesh, P("data")))
+    p_sh = jax.device_put(params, NamedSharding(mesh, P()))
+    _, g_mesh = vg(p_sh, sb_sh, w_sh)
+    for x, y in zip(jax.tree.leaves(g_mesh), jax.tree.leaves(g_host)):
+        # sharded reductions reassociate float adds; bitwise equality is not
+        # expected, 1e-4 relative is
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-3, atol=2e-5)
+    print("fused sharded ok")
+
+
+def check_dryrun_small():
+    """Miniature dry-run: lower+compile a reduced arch on a 4x2 mesh with the
+    same code path as launch/dryrun (which needs 512 devices)."""
+    from functools import partial
+
+    from repro.configs import get_config
+    from repro.models.lm import build_model
+    from repro.models.sharding import activation_axes
+    from repro.optim.adam import adamw_init
+    from repro.roofline.analysis import analyze_compiled
+    from repro.train.steps import make_fused_train_step
+    from repro.configs.base import TrainConfig
+
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.param_specs(tp_axis="model", tp_size=2)
+    params_in = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        pshapes, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    opt_shapes = jax.eval_shape(partial(adamw_init), pshapes)
+    from repro.optim.adam import AdamWState
+
+    opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs, master=None)
+    opt_in = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        opt_shapes, opt_specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    B, S = 8, 32
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=NamedSharding(mesh, P("data"))),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=NamedSharding(mesh, P("data"))),
+        "weight": jax.ShapeDtypeStruct((B,), jnp.float32, sharding=NamedSharding(mesh, P("data"))),
+    }
+    step_fn = make_fused_train_step(model, TrainConfig(), accum_steps=1)
+    with activation_axes(("data",), 4):
+        with mesh:
+            lowered = jax.jit(step_fn).lower(
+                params_in, opt_in, batch, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+            compiled = lowered.compile()
+    rep = analyze_compiled(compiled, arch="llama-reduced", shape="tiny", mesh_name="4x2",
+                           chips=8, model_flops=1.0)
+    assert rep.flops_per_chip > 0
+    assert compiled.memory_analysis() is not None
+    print("dryrun small ok: flops/chip", rep.flops_per_chip, "bottleneck", rep.bottleneck)
+
+
+if __name__ == "__main__":
+    {
+        "faithful_spmd": check_faithful_spmd,
+        "fused_sharded": check_fused_sharded_equals_host,
+        "dryrun_small": check_dryrun_small,
+    }[sys.argv[1]]()

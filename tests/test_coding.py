@@ -1,0 +1,214 @@
+"""Properties of the paper's coding constructions (Lemmas 1-3, Thms 4-6)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Decoder,
+    DecodeError,
+    allocate,
+    build_cyclic,
+    build_fractional_repetition,
+    build_group_based,
+    build_heter_aware,
+    build_naive,
+    satisfies_condition1,
+    solve_decode_vector,
+    support_matrix,
+)
+
+# ---------------------------------------------------------------------------
+# allocation (Eq. 5/6)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(2, 8).flatmap(
+        lambda m: st.tuples(
+            st.just(m),
+            st.integers(0, m - 1),  # s < m
+            st.lists(st.floats(0.25, 8.0), min_size=m, max_size=m),
+            st.integers(1, 4),  # partitions per worker
+        )
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_allocation_properties(args):
+    m, s, c, ppw = args
+    k = m * ppw
+    alloc = allocate(k, s, c)
+    # total copies
+    assert sum(alloc.counts) == k * (s + 1)
+    # every partition on exactly s+1 distinct workers
+    for j in range(k):
+        holders = alloc.holders(j)
+        assert len(holders) == s + 1
+        assert len(set(holders)) == s + 1
+    # no worker exceeds k partitions and arcs have no duplicates
+    for parts in alloc.partitions:
+        assert len(parts) <= k
+        assert len(set(parts)) == len(parts)
+
+
+def test_allocation_paper_example1():
+    """Paper Example 1: c=[1,2,3,4,4], s=1, k=7 -> n=[1,2,3,4,4], cyclic arcs."""
+    alloc = allocate(7, 1, [1, 2, 3, 4, 4])
+    assert alloc.counts == (1, 2, 3, 4, 4)
+    assert alloc.partitions[0] == (0,)
+    assert alloc.partitions[1] == (1, 2)
+    assert alloc.partitions[2] == (3, 4, 5)
+    assert alloc.partitions[3] == (6, 0, 1, 2)
+    assert alloc.partitions[4] == (3, 4, 5, 6)
+    sup = support_matrix(alloc)
+    assert sup.sum() == 14
+
+
+def test_allocation_infeasible():
+    with pytest.raises(ValueError):
+        allocate(4, 3, [1.0, 1.0])  # m <= s
+    with pytest.raises(ValueError):
+        allocate(2, 3, [1.0, 1.0, 1.0])  # k(s+1) > m*k
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 construction (Lemma 2/3, Thm 4/5)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(3, 6).flatmap(
+        lambda m: st.tuples(
+            st.just(m),
+            st.integers(1, min(m - 1, 3)),
+            st.lists(st.floats(0.5, 4.0), min_size=m, max_size=m),
+            st.integers(1, 2),
+            st.integers(0, 10_000),
+        )
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_heter_aware_robustness(args):
+    """Thm 4: B from Alg.1 tolerates any s stragglers (Condition 1)."""
+    m, s, c, ppw, seed = args
+    k = m * ppw
+    sch = build_heter_aware(k, s, c, rng=seed)
+    assert np.allclose(sch.C @ sch.B, 1.0, atol=1e-6)  # CB = 1 (Lemma 2)
+    assert satisfies_condition1(sch.B, s)
+    # support matches the allocation
+    assert set(map(tuple, np.argwhere(np.abs(sch.B) > 1e-12))) == {
+        (i, j) for i, ps in enumerate(sch.allocation.partitions) for j in ps
+    }
+
+
+def test_heter_aware_optimality():
+    """Thm 5: every worker finishes in (s+1)k/sum(c) under accurate c."""
+    c = np.array([1.0, 2.0, 3.0, 4.0, 4.0])
+    k, s = 14, 1
+    sch = build_heter_aware(k, s, c, rng=0)
+    t = sch.worker_load() / c
+    opt = (s + 1) * k / c.sum()
+    assert np.allclose(t, opt)
+
+
+def test_cyclic_matches_tandon_structure():
+    sch = build_cyclic(5, 2)
+    assert sch.k == 5
+    for i, parts in enumerate(sch.allocation.partitions):
+        assert sorted(parts) == sorted((i * 3 + j) % 5 for j in range(0, 3)) or len(parts) == 3
+        assert len(parts) == 3  # s+1 each
+    assert satisfies_condition1(sch.B, 2)
+
+
+def test_naive_zero_tolerance():
+    sch = build_naive(4)
+    assert np.allclose(sch.B, np.eye(4))
+    dec = Decoder(sch)
+    with pytest.raises(DecodeError):
+        dec.decode_vector([0, 1, 2])  # any missing worker is fatal
+
+
+def test_fractional_repetition():
+    sch = build_fractional_repetition(6, 2)
+    assert satisfies_condition1(sch.B, 2)
+    with pytest.raises(ValueError):
+        build_fractional_repetition(5, 1)  # (s+1) must divide m
+
+
+# ---------------------------------------------------------------------------
+# decoding (Eq. 2 / Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=25, deadline=None)
+def test_decode_all_patterns(seed):
+    m, s, k = 5, 2, 10
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0.5, 4.0, m)
+    sch = build_heter_aware(k, s, c, rng=seed)
+    dec = Decoder(sch)
+    for dead in itertools.combinations(range(m), s):
+        avail = [i for i in range(m) if i not in dead]
+        a = dec.decode_vector(avail)
+        assert np.allclose(a @ sch.B, 1.0, atol=1e-5)
+        assert all(abs(a[i]) < 1e-12 for i in dead)
+
+
+def test_decode_vector_unsolvable():
+    sch = build_heter_aware(8, 1, [1, 1, 1, 1], rng=0)
+    with pytest.raises(DecodeError):
+        solve_decode_vector(sch.B, [0])  # one worker can't span 1
+
+
+# ---------------------------------------------------------------------------
+# group-based scheme (Alg. 2/3, Thm 6)
+# ---------------------------------------------------------------------------
+
+
+def test_groups_paper_example():
+    gb = build_group_based(7, 1, [1, 2, 3, 4, 4], rng=0)
+    # groups tile the dataset with disjoint workers
+    for g in gb.groups:
+        parts = [p for w in g for p in gb.allocation.partitions[w]]
+        assert sorted(parts) == list(range(7))  # condition (*)
+    flat = [w for g in gb.groups for w in g]
+    assert len(flat) == len(set(flat))  # condition (**)
+    assert satisfies_condition1(gb.B, 1)
+    # group rows are 0/1 indicators
+    for g in gb.groups:
+        for w in g:
+            row = gb.B[w]
+            assert set(np.unique(row)).issubset({0.0, 1.0})
+
+
+@given(
+    st.integers(3, 6).flatmap(
+        lambda m: st.tuples(
+            st.just(m),
+            st.integers(1, min(m - 1, 2)),
+            st.lists(st.floats(0.5, 3.0), min_size=m, max_size=m),
+            st.integers(0, 5000),
+        )
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_group_based_robustness(args):
+    m, s, c, seed = args
+    k = 2 * m
+    gb = build_group_based(k, s, c, rng=seed)
+    assert satisfies_condition1(gb.B, s)  # Thm 6
+
+
+def test_group_decode_uses_fewer_workers():
+    """§V motivation: a group decode needs <= m - s workers."""
+    gb = build_group_based(7, 1, [1, 2, 3, 4, 4], rng=0)
+    if not gb.groups:
+        return
+    dec = Decoder(gb)
+    g = min(gb.groups, key=len)
+    a = dec.decode_vector(list(g))
+    assert np.count_nonzero(a) == len(g) <= gb.m - gb.s
+    assert np.allclose(a @ gb.B, 1.0, atol=1e-6)

@@ -1,0 +1,89 @@
+"""Timing model vs the paper's theorems and qualitative claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSim,
+    FixedDelayStragglers,
+    NoStragglers,
+    build_cyclic,
+    build_heter_aware,
+    build_naive,
+    make_scheme,
+    theoretical_optimal_time,
+)
+
+
+def test_heter_aware_hits_theoretical_optimum():
+    c = np.array([1.0, 2.0, 3.0, 4.0, 4.0])
+    sch = build_heter_aware(14, 1, c, rng=0)
+    sim = ClusterSim(sch, c)
+    res = sim.run(NoStragglers(), 10, rng=0)
+    assert res.mean_T == pytest.approx(theoretical_optimal_time(14, 1, c))
+
+
+def test_heter_aware_flat_under_faults():
+    """Fig. 2 claim: iteration time unchanged when <= s workers die."""
+    c = np.array([1.0, 2.0, 3.0, 4.0, 4.0])
+    sch = build_heter_aware(14, 1, c, rng=0)
+    base = ClusterSim(sch, c).run(NoStragglers(), 20, rng=0).mean_T
+    fault = ClusterSim(sch, c).run(FixedDelayStragglers(1, np.inf), 20, rng=1).mean_T
+    assert fault == pytest.approx(base, rel=1e-6)
+    assert ClusterSim(sch, c).run(FixedDelayStragglers(1, np.inf), 20, rng=1).failures == 0
+
+
+def test_cyclic_gated_by_slowest():
+    """§VI: cyclic allocates uniformly, so the slowest worker gates it; the
+    heterogeneity-aware scheme beats it by ~the paper's margin."""
+    c = np.array([1.0, 1.0, 4.0, 4.0, 4.0, 4.0, 8.0, 8.0])
+    m, s = len(c), 1
+    cyc = ClusterSim(build_cyclic(m, s, rng=0), c).run(NoStragglers(), 10, rng=0)
+    het = ClusterSim(build_heter_aware(2 * m, s, c, rng=0), c).run(NoStragglers(), 10, rng=0)
+    # cyclic worst-case: n-th fastest... decode needs m-s workers incl. a slow one
+    assert het.mean_T < cyc.mean_T
+    speedup = cyc.mean_T / het.mean_T
+    assert speedup > 1.5  # heterogeneous cluster -> big win
+
+
+def test_naive_fails_on_fault():
+    c = np.ones(4)
+    sim = ClusterSim(build_naive(4), c, wait_for_all=False)
+    res = sim.run(FixedDelayStragglers(1, np.inf), 5, rng=0)
+    assert res.failures == 5  # cannot decode without the dead worker
+
+
+def test_naive_delay_grows_linearly():
+    c = np.ones(4)
+    t1 = ClusterSim(build_naive(4), c, wait_for_all=True).run(FixedDelayStragglers(1, 1.0), 10, 0).mean_T
+    t2 = ClusterSim(build_naive(4), c, wait_for_all=True).run(FixedDelayStragglers(1, 3.0), 10, 0).mean_T
+    assert t2 - t1 == pytest.approx(2.0, abs=1e-6)
+
+
+def test_resource_usage_ordering():
+    """Fig. 5: heter-aware/group-based keep workers usefully busy; naive
+    wastes fast workers on waiting (slowest gates BSP) on a heterogeneous
+    cluster.  Speeds are dataset-units/s, so simulate at c*k partitions/s
+    (schemes use different k)."""
+    c = np.array([1.0, 1.0, 4.0, 4.0, 8.0, 8.0, 8.0, 12.0])
+    m, s = len(c), 1
+    runs = {}
+    for name in ["naive", "cyclic", "heter_aware", "group_based"]:
+        k = 4 * m if name in ("heter_aware", "group_based") else m
+        sch = make_scheme(name, m, k, s if name != "naive" else 0, c, rng=0)
+        sim = ClusterSim(sch, c * sch.k, comm_time=0.002, wait_for_all=(name == "naive"))
+        runs[name] = sim.run(FixedDelayStragglers(1, 0.5), 30, rng=0)
+    assert runs["heter_aware"].resource_usage > runs["cyclic"].resource_usage
+    assert runs["heter_aware"].resource_usage > runs["naive"].resource_usage
+    assert runs["group_based"].resource_usage > runs["naive"].resource_usage
+
+
+def test_group_based_robust_to_misestimation():
+    """§V: when true speeds deviate from the estimates used to build B, the
+    group-based scheme degrades no worse than heter-aware."""
+    est = np.array([1.0, 2.0, 3.0, 4.0, 4.0])
+    rng = np.random.default_rng(3)
+    true = est * rng.uniform(0.7, 1.3, est.shape)
+    het = ClusterSim(build_heter_aware(14, 1, est, rng=0), true).run(NoStragglers(), 20, rng=0)
+    grp = ClusterSim(make_scheme("group_based", 5, 14, 1, est, rng=0), true).run(NoStragglers(), 20, rng=0)
+    assert grp.mean_T <= het.mean_T * 1.05

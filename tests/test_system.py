@@ -1,0 +1,94 @@
+"""End-to-end behaviour: the paper's claims exercised through the full
+system (real model, real gradients, coded aggregation, faults, restart)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CodingConfig, TrainConfig, get_config
+from repro.core.straggler import FixedDelayStragglers
+from repro.data.pipeline import SyntheticData
+from repro.models.lm import build_model
+from repro.train.serve import LMServer
+from repro.train.trainer import CodedTrainer
+
+
+def test_paper_headline_end_to_end(tmp_path):
+    """Heter-aware coded training on a heterogeneous 4-worker cluster with a
+    fault every iteration: (1) every step decodes the exact gradient (loss
+    falls), (2) simulated iteration time matches the Thm.5 optimum (not the
+    slowest worker), (3) the run survives checkpoint+restart, (4) the final
+    model serves."""
+    cfg = get_config("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    speeds = np.array([1.0, 2.0, 4.0, 8.0])
+    coding = CodingConfig(scheme="heter_aware", s=1)
+    tc = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=16)
+    # c_init = the paper's calibration-by-sampling; without it the EWMA
+    # learns the speeds over the first ~10 steps (tested elsewhere)
+    tr = CodedTrainer(model, coding, tc, m=4, part_mb=2,
+                      straggler_model=FixedDelayStragglers(s=1, delay=np.inf),
+                      true_speeds=speeds, c_init=speeds)
+    data = SyntheticData(cfg, k=tr.k, part_mb=2, seq_len=32)
+
+    state = tr.init_state(jax.random.PRNGKey(0))
+    losses, times = [], []
+    for step in range(8):
+        state, met = tr.step(state, data.batch(step))
+        losses.append(met["loss"])
+        times.append(met["sim_iter_time"])
+    assert losses[-1] < losses[0]
+
+    # Thm.5: T ~= (s+1)k/sum(c) (within integerization slack), despite the
+    # fault — NOT gated by the slowest worker (which would be ~2x larger)
+    from repro.core import theoretical_optimal_time
+
+    opt = theoretical_optimal_time(tr.k, 1, speeds)
+    assert np.mean(times) < 1.6 * opt
+
+    # checkpoint / restart
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.train.trainer import TrainerState
+
+    save_checkpoint(str(tmp_path), 8, {"params": state.params, "opt": state.opt})
+    restored, _ = restore_checkpoint(str(tmp_path), 8, {"params": state.params, "opt": state.opt})
+    state2 = TrainerState(params=restored["params"], opt=restored["opt"], step=8)
+    state2, met2 = tr.step(state2, data.batch(8))
+    assert np.isfinite(met2["loss"])
+
+    # serve the trained model
+    srv = LMServer(model)
+    toks = np.asarray(data.partition(99, 0)["tokens"][:, :16])
+    out = srv.generate(state2.params, {"tokens": jax.numpy.asarray(toks)}, max_new_tokens=4)
+    assert out.shape == (toks.shape[0], 4)
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+def test_scheme_equivalence_on_real_model():
+    """All coding schemes produce the same parameters as uncoded DP when
+    decoding succeeds — gradient coding is exact, not approximate."""
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    tc = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=6)
+    m, part_mb = 4, 2
+
+    ref_tr = CodedTrainer(model, CodingConfig(scheme="naive", s=0), tc, m=8, part_mb=part_mb)
+    data = SyntheticData(cfg, k=8, part_mb=part_mb, seq_len=32)
+    ref_state = ref_tr.init_state(jax.random.PRNGKey(0))
+    ref_state, ref_met = ref_tr.step(ref_state, data.batch(0))
+
+    for scheme in ["heter_aware", "group_based", "cyclic", "fractional_repetition"]:
+        k = 8 if scheme in ("heter_aware", "group_based") else m
+        if scheme in ("cyclic", "fractional_repetition"):
+            # k == m for these schemes; use m=8 workers to keep k=8
+            tr = CodedTrainer(model, CodingConfig(scheme=scheme, s=1), tc, m=8, part_mb=part_mb,
+                              straggler_model=FixedDelayStragglers(1, np.inf))
+        else:
+            tr = CodedTrainer(model, CodingConfig(scheme=scheme, s=1,
+                                                  partitions_per_worker=2), tc,
+                              m=m, part_mb=part_mb,
+                              straggler_model=FixedDelayStragglers(1, np.inf))
+        assert tr.k == 8
+        st = tr.init_state(jax.random.PRNGKey(0))
+        st, met = tr.step(st, data.batch(0))
+        assert met["loss"] == pytest.approx(ref_met["loss"], rel=2e-4), scheme
