@@ -1,0 +1,17 @@
+# Repo task runner.  `make test` is the tier-1 gate (same command the CI
+# driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
+# being tribal knowledge.
+
+.PHONY: test test-fast bench quickstart
+
+test:
+	./scripts/test.sh
+
+test-fast:  ## skip the slow subprocess SPMD tests
+	./scripts/test.sh --ignore=tests/test_spmd.py
+
+bench:
+	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/run.py
+
+quickstart:
+	PYTHONPATH=src python examples/quickstart.py

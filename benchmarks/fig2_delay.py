@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.clusters import cluster_speeds, sim_speeds
-from repro.core import ClusterSim, FixedDelayStragglers, make_scheme
+from repro.core import ClusterSim, FixedDelayStragglers, get_scheme
 
 DELAYS = [0.0, 0.5, 1.0, 2.0, 5.0, np.inf]
 SCHEMES = ["naive", "cyclic", "heter_aware", "group_based"]
@@ -24,8 +24,9 @@ def run(n_iters: int = 200, seed: int = 0):
         for scheme in SCHEMES:
             s_eff = 0 if scheme == "naive" else s
             k = 4 * m if scheme in ("heter_aware", "group_based") else m
-            sch = make_scheme(scheme, m, k, s_eff, c, rng=seed)
-            sim = ClusterSim(sch, sim_speeds(c, sch.k), comm_time=0.005, wait_for_all=(scheme == "naive"))
+            code = get_scheme(scheme, m=m, k=k, s=s_eff, c=c, rng=seed)
+            sim = ClusterSim(code, sim_speeds(c, code.k), comm_time=0.005,
+                             wait_for_all=code.wait_for_all)
             for delay in DELAYS:
                 res = sim.run(FixedDelayStragglers(s, delay), n_iters, rng=seed)
                 rows.append({

@@ -20,8 +20,8 @@ import numpy as np
 
 from benchmarks.clusters import cluster_speeds
 from repro.configs.paper_cnn import CONFIG as CNN
-from repro.core import ClusterSim, Decoder, TransientStragglers, make_scheme
-from repro.core.aggregator import fused_coded_value_and_grad, make_plan, pack_coded_batch, slot_weights
+from repro.core import ClusterSim, Codec, TransientStragglers, get_scheme
+from repro.core.aggregator import fused_coded_value_and_grad
 
 
 # ---------------------------------------------------------------------------
@@ -103,24 +103,22 @@ def run(n_steps: int = 60, lr: float = 0.02, images_per_iter: int = 64, seed: in
             continue
         s_eff = 0 if scheme_name == "naive" else s
         k = 2 * m if scheme_name in ("heter_aware", "group_based") else m
-        sch = make_scheme(scheme_name, m, k, s_eff, c, rng=seed)
+        codec = Codec(get_scheme(scheme_name, m=m, k=k, s=s_eff, c=c, rng=seed))
         # same dataset per iteration for every scheme: partition = 1/k of it
-        part_mb = max(1, images_per_iter // sch.k)
-        plan = make_plan(sch)
-        dec = Decoder(sch)
+        part_mb = max(1, images_per_iter // codec.k)
         # c is images/sec -> partitions/sec = c / part_mb
-        sim = ClusterSim(sch, c / part_mb, comm_time=0.02, wait_for_all=(scheme_name == "naive"))
+        sim = ClusterSim(codec.code, c / part_mb, comm_time=0.02,
+                         wait_for_all=codec.code.wait_for_all)
         vg = jax.jit(fused_coded_value_and_grad(cnn_loss))
         for step in range(n_steps):
-            x, y = synth_images(rng, sch.k * part_mb)
-            pb = {"x": jnp.asarray(x.reshape(sch.k, part_mb, *x.shape[1:])),
-                  "y": jnp.asarray(y.reshape(sch.k, part_mb))}
+            x, y = synth_images(rng, codec.k * part_mb)
+            pb = {"x": jnp.asarray(x.reshape(codec.k, part_mb, *x.shape[1:])),
+                  "y": jnp.asarray(y.reshape(codec.k, part_mb))}
             it = sim.iteration(straggler.sample(m, rng))
             clock += it.T if np.isfinite(it.T) else max(f for f in it.finish if np.isfinite(f))
             avail = list(it.used) if np.isfinite(it.T) else [i for i in range(m) if np.isfinite(it.finish[i])]
-            a = dec.decode_vector(avail)
-            w = slot_weights(plan, a)
-            loss, grads = vg(params, pack_coded_batch(pb, plan), jnp.asarray(w))
+            w = codec.slot_weights(codec.decode_vector(avail))
+            loss, grads = vg(params, codec.pack(pb), jnp.asarray(w))
             params = _sgd(params, grads, lr)
             rows.append({"bench": "fig4", "scheme": scheme_name, "step": step,
                          "sim_time_s": clock, "loss": float(eval_loss(params, eval_batch)),

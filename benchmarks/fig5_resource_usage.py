@@ -7,7 +7,7 @@ work, heter-aware/group-based keep workers busy AND useful."""
 from __future__ import annotations
 
 from benchmarks.clusters import cluster_speeds, sim_speeds
-from repro.core import ClusterSim, ComposedModel, FixedDelayStragglers, TransientStragglers, make_scheme
+from repro.core import ClusterSim, ComposedModel, FixedDelayStragglers, TransientStragglers, get_scheme
 
 SCHEMES = ["naive", "cyclic", "heter_aware", "group_based"]
 
@@ -20,8 +20,9 @@ def run(n_iters: int = 200, s: int = 1, seed: int = 0):
     for scheme in SCHEMES:
         s_eff = 0 if scheme == "naive" else s
         k = 4 * m if scheme in ("heter_aware", "group_based") else m
-        sch = make_scheme(scheme, m, k, s_eff, c, rng=seed)
-        sim = ClusterSim(sch, sim_speeds(c, sch.k), comm_time=0.005, wait_for_all=(scheme == "naive"))
+        code = get_scheme(scheme, m=m, k=k, s=s_eff, c=c, rng=seed)
+        sim = ClusterSim(code, sim_speeds(c, code.k), comm_time=0.005,
+                         wait_for_all=code.wait_for_all)
         res = sim.run(model, n_iters, rng=seed)
         rows.append({
             "bench": "fig5", "scheme": scheme,

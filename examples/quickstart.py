@@ -1,8 +1,9 @@
-"""Quickstart: the paper's scheme in ~40 lines.
+"""Quickstart: the paper's scheme through the registry API in ~40 lines.
 
 Builds a heterogeneity-aware gradient code for a 5-worker cluster (the
-paper's Example 1), shows that any single straggler is survivable with zero
-time penalty, and decodes an exact gradient on a toy model.
+paper's Example 1) via ``get_scheme``, shows that any single straggler is
+survivable with zero time penalty, and decodes an exact gradient on a toy
+model through a ``Codec``.  See DESIGN.md for the API tour.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,27 +13,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    Codec,
     ClusterSim,
-    Decoder,
     FixedDelayStragglers,
-    build_heter_aware,
+    get_scheme,
+    scheme_names,
     theoretical_optimal_time,
 )
-from repro.core.aggregator import (
-    fused_coded_value_and_grad,
-    make_plan,
-    pack_coded_batch,
-    slot_weights,
-)
+from repro.core.aggregator import fused_coded_value_and_grad
 
 # --- the paper's Example 1: 5 workers with speeds 1:2:3:4:4, one straggler ---
 c = np.array([1.0, 2.0, 3.0, 4.0, 4.0])
-scheme = build_heter_aware(k=7, s=1, c=c, rng=0)
-print("allocation n_i:", scheme.allocation.counts)  # (1, 2, 3, 4, 4) — Eq. 5
-print("C·B == 1:", np.allclose(scheme.C @ scheme.B, 1.0))
+code = get_scheme("heter_aware", m=5, k=7, s=1, c=c, rng=0)  # any of scheme_names()
+print("registered schemes:", ", ".join(scheme_names()))
+print("allocation n_i:", code.allocation.counts)  # (1, 2, 3, 4, 4) — Eq. 5
+print("C·B == 1:", np.allclose(code.scheme.C @ code.B, 1.0))
 
 # --- any worker may die; iteration time stays at the Thm.5 optimum ---
-sim = ClusterSim(scheme, c)
+sim = ClusterSim(code, c)
 res = sim.run(FixedDelayStragglers(s=1, delay=np.inf), n_iters=100, rng=0)
 print(f"iteration time with a fault every step: {res.mean_T:.4f}s "
       f"(optimum {theoretical_optimal_time(7, 1, c):.4f}s, failures={res.failures})")
@@ -46,11 +44,11 @@ params = {"w": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
 batch = {"x": jnp.asarray(rng.normal(size=(7, 4, 8)), jnp.float32),
          "y": jnp.asarray(rng.normal(size=(7, 4)), jnp.float32)}
 
-plan = make_plan(scheme)
+codec = Codec(code)  # device-feedable slot plan, shape-stable under rebalance
 worker_3_died = [0, 1, 2, 4]
-weights = slot_weights(plan, Decoder(scheme).decode_vector(worker_3_died))
+weights = codec.slot_weights(codec.decode_vector(worker_3_died))
 loss, grads = fused_coded_value_and_grad(loss_fn)(
-    params, pack_coded_batch(batch, plan), jnp.asarray(weights))
+    params, codec.pack(batch), jnp.asarray(weights))
 
 truth = jax.tree.map(jnp.zeros_like, params)
 for j in range(7):

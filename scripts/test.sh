@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 test gate: run from anywhere, extra pytest args pass through.
+#   ./scripts/test.sh                    # full suite
+#   ./scripts/test.sh tests/test_coding.py -k decode
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -1,6 +1,9 @@
 """Heterogeneity-aware gradient coding — the paper's contribution.
 
 Public API:
+  registry:    GradientCode protocol + @register_scheme/get_scheme factory
+  schemes:     the five built-in codes bound to the registry
+  codec:       code + shape-stable slot plan + decode (runtime seam)
   allocation:  heterogeneity-aware partition allocation (Eq. 5/6)
   coding:      B-matrix construction — Alg. 1 + baselines
   groups:      group-based scheme (Alg. 2/3)
@@ -12,6 +15,15 @@ Public API:
 """
 
 from repro.core.allocation import Allocation, allocate, support_matrix
+from repro.core.registry import (
+    GradientCode,
+    get_scheme,
+    register_scheme,
+    scheme_class,
+    scheme_names,
+)
+from repro.core import schemes as _schemes  # noqa: F401 - registers built-ins
+from repro.core.codec import Codec
 from repro.core.coding import (
     CodingScheme,
     build_cyclic,
@@ -35,6 +47,12 @@ from repro.core.straggler import (
 from repro.core.throughput import ThroughputEstimator
 
 __all__ = [
+    "GradientCode",
+    "get_scheme",
+    "register_scheme",
+    "scheme_class",
+    "scheme_names",
+    "Codec",
     "Allocation",
     "allocate",
     "support_matrix",

@@ -58,6 +58,22 @@ PyTree = Any
 LossFn = Callable[[PyTree, PyTree], jnp.ndarray]  # (params, slot_batch) -> scalar
 
 
+def _shard_map(fn, mesh, in_specs, out_specs, manual_axes: tuple[str, ...]):
+    """shard_map across jax versions: manual over ``manual_axes``, auto over
+    the rest ('model' stays GSPMD-handled either way)."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=frozenset(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map  # jax 0.4.x
+
+    # the `auto=` subgroup path trips an XLA CHECK on 0.4.x CPU, so go fully
+    # manual: non-coding axes see replicated blocks (duplicate compute over
+    # 'model' — acceptable for the protocol/benchmark path on old jax)
+    return shard_map(fn, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class CodedPlan:
     """Device-feedable view of a CodingScheme.
@@ -139,12 +155,14 @@ def protocol_reference(
     partition_batch: PyTree,
     scheme: CodingScheme,
     available: Sequence[int] | None = None,
+    decode_vec: np.ndarray | None = None,
 ) -> tuple[PyTree, list[PyTree]]:
     """Paper protocol, literally.  Returns (decoded mean gradient, [g̃_w]).
 
     Workers compute per-partition gradients, encode with their B row, the
     master decodes from the available set.  Not jitted end-to-end (python
-    loops) — this is the oracle, not the fast path.
+    loops) — this is the oracle, not the fast path.  Pass ``decode_vec`` to
+    reuse a decode solved elsewhere (e.g. a GradientCode's fast path).
     """
     m, k = scheme.m, scheme.k
     grad_fn = jax.jit(jax.grad(loss_fn))
@@ -158,8 +176,12 @@ def protocol_reference(
             bwj = float(scheme.B[w, j])
             gw = jax.tree.map(lambda acc, g, b=bwj: acc + b * g, gw, part_grads[j])
         coded.append(gw)
-    avail = list(range(m)) if available is None else list(available)
-    a = Decoder(scheme).decode_vector(avail)
+    if decode_vec is not None:
+        a = np.asarray(decode_vec, np.float64)
+        avail = [i for i in range(m) if abs(a[i]) > 1e-12]
+    else:
+        avail = list(range(m)) if available is None else list(available)
+        a = Decoder(scheme).decode_vector(avail)
     decoded = jax.tree.map(jnp.zeros_like, params)
     for w in avail:
         if abs(a[w]) < 1e-12:
@@ -251,12 +273,7 @@ def faithful_spmd_step(
 
     dp = jax.sharding.PartitionSpec(coding_axes)
     rep = jax.sharding.PartitionSpec()
-    fn = jax.shard_map(
-        worker_fn,
-        mesh=mesh,
-        in_specs=(rep, dp, dp, dp, dp),
-        out_specs=(rep, dp),
-        axis_names=frozenset(coding_axes),
-        check_vma=False,
+    return _shard_map(
+        worker_fn, mesh, in_specs=(rep, dp, dp, dp, dp), out_specs=(rep, dp),
+        manual_axes=coding_axes,
     )
-    return fn

@@ -1,0 +1,121 @@
+"""Codec: one gradient code + its device-feedable slot plan (DESIGN.md §2).
+
+The codec is the shape-stability boundary of the runtime: it fixes a slot
+capacity ``n_slots`` ONCE (from the scheme's *effective* k — structural
+schemes force k = m, so capacity is derived only after the scheme settles
+k), and every elastic re-encode afterwards only rewrites the *values* of
+the plan tensors.  Downstream jitted step functions therefore never
+recompile across rebalances.
+
+Rebalance-capable schemes get drift headroom on top of the worst-case
+allocation share; structural baselines (cyclic/naive/FRS) get an exact-fit
+plan — their allocation ignores throughput estimates, so padding them
+(as the old monolithic trainer did, sizing slots from the *requested* k
+before the structural override) only wasted compute on zero-weight slots.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.aggregator import CodedPlan, make_plan, pack_coded_batch, slot_weights
+from repro.core.coding import CodingScheme
+from repro.core.registry import GradientCode, get_scheme, plan_slot_capacity, scheme_class
+
+if TYPE_CHECKING:  # avoid a hard configs dependency at import time
+    from repro.configs.base import CodingConfig
+
+__all__ = ["Codec"]
+
+
+class Codec:
+    """Scheme + plan + decode, shape-stable across elastic re-encodes."""
+
+    def __init__(self, code: GradientCode, n_slots: int | None = None):
+        self.code = code
+        n_max = max(1, max(code.allocation.counts))
+        if n_slots is None:
+            # rebalanceable codes keep headroom for allocation drift;
+            # structural ones never re-allocate, so exact fit is safe
+            n_slots = (
+                plan_slot_capacity(code.k, code.s, code.m, code.c)
+                if code.supports_rebalance
+                else n_max
+            )
+        if n_slots < n_max:
+            raise ValueError(f"n_slots={n_slots} < allocation max {n_max}")
+        self.n_slots = int(n_slots)
+        # cap future re-allocations at the fixed capacity, whatever path
+        # constructed the code — otherwise a skewed rebalance() could grow
+        # a worker past n_slots and break the shape-stability contract
+        if code.supports_rebalance and (code.max_load is None or code.max_load > self.n_slots):
+            code.max_load = self.n_slots
+        self.plan: CodedPlan = make_plan(code.scheme, self.n_slots)
+
+    @classmethod
+    def from_config(
+        cls,
+        coding: "CodingConfig",
+        *,
+        m: int,
+        c_init: Sequence[float] | None = None,
+        rng: np.random.Generator | int | None = 0,
+    ) -> "Codec":
+        """Build code + plan from a :class:`CodingConfig`.
+
+        Slot capacity is planned from the scheme's EFFECTIVE k (known from
+        the class's ``structural_k`` declaration before construction) and
+        passed as ``max_load`` so even the first allocation fits the plan.
+        """
+        kcls = scheme_class(coding.scheme)
+        k_req = m * coding.partitions_per_worker
+        k_eff = kcls.effective_k(m, k_req)
+        cap = None
+        if kcls.supports_rebalance:
+            c = np.asarray(c_init, np.float64) if c_init is not None else None
+            cap = plan_slot_capacity(k_eff, coding.s, m, c)
+        code = get_scheme(coding.scheme, m=m, k=k_req, s=coding.s, c=c_init, rng=rng, max_load=cap)
+        return cls(code, n_slots=cap)
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return self.code.m
+
+    @property
+    def k(self) -> int:
+        return self.code.k
+
+    @property
+    def s(self) -> int:
+        return self.code.s
+
+    @property
+    def scheme(self) -> CodingScheme:
+        return self.code.scheme
+
+    # -- decode + device views ---------------------------------------------
+
+    def decode_vector(self, available: Iterable[int]) -> np.ndarray:
+        return self.code.decode_vector(available)
+
+    def slot_weights(self, decode_vec: np.ndarray) -> np.ndarray:
+        """(m, n_slots) fused-path weights a_w·B[w,pid]/k (0 on padding)."""
+        return slot_weights(self.plan, decode_vec)
+
+    def pack(self, partition_batch):
+        """Partition-major (k, mb, ...) -> slot-major (m, n_slots, mb, ...)."""
+        return pack_coded_batch(partition_batch, self.plan)
+
+    # -- elastic -----------------------------------------------------------
+
+    def rebalance(self, c: Sequence[float]) -> None:
+        """Re-encode from fresh throughput estimates; plan VALUES change,
+        shapes never do (fixed ``n_slots``) — no recompilation downstream."""
+        shape_before = self.plan.slot_pids.shape
+        self.code.rebalance(c)
+        self.plan = make_plan(self.code.scheme, self.n_slots)
+        assert self.plan.slot_pids.shape == shape_before  # contract, DESIGN.md §4

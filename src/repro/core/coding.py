@@ -177,23 +177,22 @@ def make_scheme(
     rng: np.random.Generator | int | None = 0,
     max_load: int | None = None,
 ) -> CodingScheme:
-    """Scheme factory used by trainer/benchmarks/CLI."""
-    c = list(c) if c is not None else [1.0] * m
-    if len(c) != m:
-        raise ValueError(f"len(c)={len(c)} != m={m}")
-    if name == "heter_aware":
-        return build_heter_aware(k, s, c, rng, max_load)
-    if name == "group_based":
-        from repro.core.groups import build_group_based
+    """DEPRECATED shim over the registry (kept for old callers/tests).
 
-        return build_group_based(k, s, c, rng, max_load)
-    if name == "cyclic":
-        return build_cyclic(m, s, rng)
-    if name == "naive":
-        return build_naive(m)
-    if name == "fractional_repetition":
-        return build_fractional_repetition(m, s)
-    raise ValueError(f"unknown scheme {name!r}")
+    New code should construct through ``repro.core.registry.get_scheme``,
+    which returns the full :class:`GradientCode` (decode fast paths,
+    rebalance, structural-k declaration) instead of the bare matrix.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_scheme is deprecated; use repro.core.registry.get_scheme",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.core.registry import get_scheme
+
+    return get_scheme(name, m=m, k=k, s=s, c=c, rng=rng, max_load=max_load).scheme
 
 
 def satisfies_condition1(B: np.ndarray, s: int, atol: float = 1e-6) -> bool:

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.coding import CodingScheme
 
-__all__ = ["DecodeError", "solve_decode_vector", "Decoder"]
+__all__ = ["DecodeError", "solve_decode_vector", "earliest_decodable_prefix", "Decoder"]
 
 _ATOL = 1e-6
 
@@ -54,6 +54,36 @@ def solve_decode_vector(
     a = np.zeros(m, dtype=np.float64)
     a[avail] = x
     return a
+
+
+def earliest_decodable_prefix(
+    decode_vector, finish_times: Sequence[float], dead: Iterable[int] = ()
+) -> tuple[float, tuple[int, ...]]:
+    """Smallest time τ at which the set of finished workers decodes —
+    Eq. 3's T(B, S) for one concrete pattern.
+
+    ``decode_vector(live)`` is any decode callable (``Decoder`` or
+    ``GradientCode``, so scheme fast paths apply); ``finish_times[i]`` =
+    time worker i returns its coded gradient (np.inf for faults).
+    Returns (τ, used_workers).
+    """
+    dead = set(dead)
+    order = np.argsort(finish_times, kind="stable")
+    live: list[int] = []
+    for idx in order:
+        i = int(idx)
+        if i in dead or not np.isfinite(finish_times[i]):
+            continue
+        live.append(i)
+        # a fast path may trigger before the span condition does
+        try:
+            a = decode_vector(live)
+        except DecodeError:
+            continue
+        used = tuple(j for j in live if abs(a[j]) > 1e-12)
+        t = max(finish_times[j] for j in used) if used else 0.0
+        return float(t), used
+    raise DecodeError("no decodable set among finished workers")
 
 
 class Decoder:
@@ -93,26 +123,4 @@ class Decoder:
     def earliest_decodable(
         self, finish_times: Sequence[float], dead: Iterable[int] = ()
     ) -> tuple[float, tuple[int, ...]]:
-        """Smallest time τ at which the set of finished workers decodes.
-
-        ``finish_times[i]`` = time worker i returns its coded gradient
-        (np.inf for full stragglers / faults).  Returns (τ, used_workers).
-        This is T(B, S) of Eq. 3 evaluated for one concrete pattern.
-        """
-        dead = set(dead)
-        order = np.argsort(finish_times, kind="stable")
-        live: list[int] = []
-        for idx in order:
-            i = int(idx)
-            if i in dead or not np.isfinite(finish_times[i]):
-                continue
-            live.append(i)
-            # group fast path may trigger before the span condition does
-            try:
-                a = self.decode_vector(live)
-            except DecodeError:
-                continue
-            used = tuple(j for j in live if abs(a[j]) > 1e-12)
-            t = max(finish_times[j] for j in used) if used else 0.0
-            return float(t), used
-        raise DecodeError("no decodable set among finished workers")
+        return earliest_decodable_prefix(self.decode_vector, finish_times, dead)

@@ -1,0 +1,255 @@
+"""Pluggable gradient-code registry (DESIGN.md §1).
+
+A *gradient code* bundles everything the runtime needs from one coding
+scheme behind a uniform surface:
+
+  - construction:  throughput estimates ``c`` -> ``B`` matrix + allocation
+    (:meth:`GradientCode.build`), re-run on elastic rebalance;
+  - decoding:      :meth:`GradientCode.decode_vector` with the scheme's own
+    fast path (group indicator for group-structured codes, LRU-cached
+    least-squares otherwise) — previously split between ``Decoder`` and
+    ``CodingScheme.groups``;
+  - declarations:  ``structural_k`` (the scheme dictates ``k = m`` and
+    ignores the requested partition count), ``supports_rebalance`` (B
+    depends on ``c``), ``wait_for_all`` (naive-BSP iteration semantics).
+
+Schemes self-register under a string name::
+
+    @register_scheme("my_code")
+    class MyCode(GradientCode):
+        def build(self, c): ...
+
+and the runtime constructs them exclusively through :func:`get_scheme` —
+adding a new code family is a one-file change (see core/schemes.py for the
+five built-ins).
+"""
+
+from __future__ import annotations
+
+import abc
+import math
+from functools import lru_cache
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.coding import CodingScheme
+from repro.core.decoding import DecodeError, earliest_decodable_prefix, solve_decode_vector
+
+__all__ = [
+    "GradientCode",
+    "register_scheme",
+    "get_scheme",
+    "scheme_class",
+    "scheme_names",
+]
+
+_REGISTRY: dict[str, type["GradientCode"]] = {}
+
+
+def register_scheme(name: str) -> Callable[[type], type]:
+    """Class decorator: register a GradientCode subclass under ``name``."""
+
+    def deco(cls: type) -> type:
+        if not (isinstance(cls, type) and issubclass(cls, GradientCode)):
+            raise TypeError(f"@register_scheme target must subclass GradientCode, got {cls!r}")
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"scheme {name!r} already registered to {_REGISTRY[name].__name__}")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def scheme_names() -> tuple[str, ...]:
+    """Registered scheme names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def scheme_class(name: str) -> type["GradientCode"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {', '.join(scheme_names()) or '(none)'}"
+        ) from None
+
+
+def get_scheme(
+    name: str,
+    *,
+    m: int,
+    k: int | None = None,
+    s: int = 1,
+    c: Sequence[float] | None = None,
+    rng: np.random.Generator | int | None = 0,
+    max_load: int | None = None,
+) -> "GradientCode":
+    """Construct a registered gradient code.  The single public factory."""
+    return scheme_class(name)(m=m, k=k, s=s, c=c, rng=rng, max_load=max_load)
+
+
+class GradientCode(abc.ABC):
+    """One gradient coding scheme + its decode state.
+
+    Subclasses implement :meth:`build` (c -> CodingScheme) and may override
+    :meth:`_decode_fast_path`.  The base class owns the generic LRU-cached
+    least-squares decode, straggler-pattern utilities, and the elastic
+    ``rebalance`` contract (rebuild B from fresh estimates, invalidate the
+    decode cache, never change ``m``/``k``/``s``).
+    """
+
+    name: str = "?"  # set by @register_scheme
+    structural_k: bool = False  # True: k is forced to m, requested k ignored
+    supports_rebalance: bool = False  # True: B depends on c estimates
+    wait_for_all: bool = False  # True: naive BSP, iteration waits for everyone
+
+    def __init__(
+        self,
+        *,
+        m: int,
+        k: int | None = None,
+        s: int = 1,
+        c: Sequence[float] | None = None,
+        rng: np.random.Generator | int | None = 0,
+        max_load: int | None = None,
+        decode_cache_size: int = 4096,
+    ):
+        if m <= 0:
+            raise ValueError(f"need m > 0, got {m}")
+        self.m = m
+        self.s = int(s)
+        self.requested_k = int(k) if k is not None else m
+        self.max_load = max_load
+        self._rng = rng if isinstance(rng, np.random.Generator) else np.random.default_rng(rng)
+        self._decode_cache_size = decode_cache_size
+        c = np.ones(m, dtype=np.float64) if c is None else np.asarray(c, dtype=np.float64)
+        if c.shape != (m,):
+            raise ValueError(f"len(c)={c.shape[0] if c.ndim else '?'} != m={m}")
+        self.c = c
+        self.scheme: CodingScheme = self.build(c)
+        self._reset_decode_cache()
+
+    # -- construction ------------------------------------------------------
+
+    @abc.abstractmethod
+    def build(self, c: np.ndarray) -> CodingScheme:
+        """Construct the encoding matrix/allocation for throughputs ``c``."""
+
+    def rebalance(self, c: Sequence[float]) -> CodingScheme:
+        """Elastic re-encode: rebuild B from fresh throughput estimates.
+
+        Host-side, milliseconds.  ``m``/``k``/``s`` never change, so slot
+        plans padded to a fixed capacity stay shape-stable.  No-op for
+        schemes whose allocation ignores ``c`` (structural baselines).
+        """
+        if not self.supports_rebalance:
+            return self.scheme
+        c = np.asarray(c, dtype=np.float64)
+        if c.shape != (self.m,):
+            raise ValueError(f"rebalance c shape {c.shape} != ({self.m},)")
+        self.c = c
+        self.scheme = self.build(c)
+        self._reset_decode_cache()
+        return self.scheme
+
+    # -- convenient views --------------------------------------------------
+
+    @property
+    def k(self) -> int:
+        return self.scheme.k
+
+    @property
+    def B(self) -> np.ndarray:
+        return self.scheme.B
+
+    @property
+    def allocation(self):
+        return self.scheme.allocation
+
+    def worker_load(self) -> np.ndarray:
+        return self.scheme.worker_load()
+
+    @classmethod
+    def effective_k(cls, m: int, k: int | None) -> int:
+        """The k this scheme will actually use — BEFORE construction.  Lets
+        the runtime size fixed slot capacity correctly for structural
+        schemes (which override any requested k with m)."""
+        return m if cls.structural_k else (int(k) if k is not None else m)
+
+    # -- decoding ----------------------------------------------------------
+
+    def _reset_decode_cache(self) -> None:
+        self._solve = lru_cache(maxsize=self._decode_cache_size)(self._solve_uncached)
+
+    def _solve_uncached(self, avail_key: frozenset[int]) -> np.ndarray:
+        return solve_decode_vector(self.scheme.B, sorted(avail_key))
+
+    def _decode_fast_path(self, avail: frozenset[int]) -> np.ndarray | None:
+        """Scheme-specific O(m) decode shortcut; None -> generic solve."""
+        return None
+
+    def decode_vector(self, available: Iterable[int]) -> np.ndarray:
+        """Decode vector ``a`` with ``supp(a) ⊆ available``, ``a·B = 1``."""
+        avail = frozenset(int(i) for i in available)
+        fast = self._decode_fast_path(avail)
+        if fast is not None:
+            return fast
+        return self._solve(avail)
+
+    def decode_cache_info(self):
+        """LRU stats of the generic solve path (hits/misses/currsize)."""
+        return self._solve.cache_info()
+
+    def is_decodable(self, available: Iterable[int]) -> bool:
+        try:
+            self.decode_vector(available)
+            return True
+        except DecodeError:
+            return False
+
+    def earliest_decodable(
+        self, finish_times: Sequence[float], dead: Iterable[int] = ()
+    ) -> tuple[float, tuple[int, ...]]:
+        """Smallest time τ at which the set of finished workers decodes
+        (Eq. 3), honouring this scheme's decode fast path."""
+        return earliest_decodable_prefix(self.decode_vector, finish_times, dead)
+
+    # -- misc --------------------------------------------------------------
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"<{type(self).__name__} name={self.name!r} m={self.m} k={self.k} "
+            f"s={self.s} structural_k={self.structural_k}>"
+        )
+
+
+class GroupIndicatorMixin:
+    """Decode fast path for group-structured codes (§V Eq. 8): a fully
+    available tiling group decodes with its 0/1 indicator — no solve, and
+    typically fewer than m−s workers."""
+
+    def _decode_fast_path(self, avail: frozenset[int]) -> np.ndarray | None:
+        for group in self.scheme.groups:
+            if avail.issuperset(group):
+                a = np.zeros(self.m, dtype=np.float64)
+                a[list(group)] = 1.0
+                return a
+        return None
+
+
+def plan_slot_capacity(
+    k: int, s: int, m: int, c: np.ndarray | None, *, headroom: float = 1.25
+) -> int:
+    """Fixed per-worker slot capacity: worst-case allocation share plus
+    drift headroom, so elastic re-allocations never change array shapes.
+    With a calibration estimate ``c`` the share is planned from the fastest
+    worker's ideal load instead of the uniform share.  ``k`` must be the
+    scheme's *effective* k (structural schemes force k = m)."""
+    if c is not None:
+        c = np.asarray(c, dtype=np.float64)
+        base = math.ceil(k * (s + 1) * float(c.max()) / float(c.sum()))
+    else:
+        base = math.ceil(k * (s + 1) / m)
+    return min(k, max(base + 1, math.ceil(base * headroom)))

@@ -1,0 +1,88 @@
+"""The five built-in gradient codes, registered as :class:`GradientCode`s.
+
+Construction math lives in core/coding.py (Alg. 1 + baselines) and
+core/groups.py (Alg. 2/3); these classes bind it to the registry protocol —
+structural-k declarations, rebalance support, and per-scheme decode fast
+paths.  Adding a code family = subclass + ``@register_scheme`` here or in
+any imported module (see PAPERS.md for the approximate/nested families
+queued behind this seam).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.coding import (
+    CodingScheme,
+    build_cyclic,
+    build_fractional_repetition,
+    build_heter_aware,
+    build_naive,
+)
+from repro.core.groups import build_group_based
+from repro.core.registry import GradientCode, GroupIndicatorMixin, register_scheme
+
+__all__ = [
+    "HeterAwareCode",
+    "GroupBasedCode",
+    "CyclicCode",
+    "NaiveCode",
+    "FractionalRepetitionCode",
+]
+
+
+@register_scheme("heter_aware")
+class HeterAwareCode(GradientCode):
+    """Paper Alg. 1: heterogeneity-aware optimal code (Thm. 5).  Allocation
+    ∝ c (Eq. 5/6), decode via LRU-cached least squares."""
+
+    supports_rebalance = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_heter_aware(self.requested_k, self.s, c, rng=self._rng, max_load=self.max_load)
+
+
+@register_scheme("group_based")
+class GroupBasedCode(GroupIndicatorMixin, GradientCode):
+    """Paper Alg. 2/3 (§V): group rows are 0/1 indicators, remainder coded
+    at reduced tolerance.  Decode fast path: first fully-available tiling
+    group wins (Eq. 8) — robust to mis-estimated throughputs."""
+
+    supports_rebalance = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_group_based(self.requested_k, self.s, c, rng=self._rng, max_load=self.max_load)
+
+
+@register_scheme("cyclic")
+class CyclicCode(GradientCode):
+    """Tandon et al. [12] cyclic baseline: k = m, uniform overlapping
+    windows, heterogeneity-oblivious (gated by the slowest worker)."""
+
+    structural_k = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_cyclic(self.m, self.s, rng=self._rng)
+
+
+@register_scheme("naive")
+class NaiveCode(GradientCode):
+    """Uncoded BSP baseline: k = m, one partition each, zero tolerance —
+    the iteration must wait for every worker."""
+
+    structural_k = True
+    wait_for_all = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_naive(self.m)
+
+
+@register_scheme("fractional_repetition")
+class FractionalRepetitionCode(GroupIndicatorMixin, GradientCode):
+    """Tandon's FRS baseline: (s+1)|m replication classes, plain-sum
+    encoding; tiling groups give an indicator decode fast path."""
+
+    structural_k = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_fractional_repetition(self.m, self.s)

@@ -60,7 +60,11 @@ class ClusterSim:
     """Simulates BSP iterations of one coding scheme on one cluster.
 
     Args:
-      scheme: the coding strategy (B + allocation + groups).
+      scheme: the coding strategy — either a bare :class:`CodingScheme`
+        (B + allocation + groups; a private ``Decoder`` is built) or a
+        :class:`~repro.core.registry.GradientCode` (its own decode fast
+        path and LRU cache are shared, and an elastic ``rebalance()`` on
+        the code is picked up in place — no sim rebuild needed).
       c: (m,) true worker throughputs in partitions/second.  The scheme may
         have been built from *estimated* throughputs — passing different
         true values is how estimation error (§V motivation) is modelled.
@@ -71,25 +75,41 @@ class ClusterSim:
 
     def __init__(
         self,
-        scheme: CodingScheme,
+        scheme,
         c: np.ndarray,
         comm_time: float = 0.0,
         wait_for_all: bool = False,
     ):
-        self.scheme = scheme
+        from repro.core.registry import GradientCode
+
+        if isinstance(scheme, GradientCode):
+            self.code: GradientCode | None = scheme
+            self.decoder = scheme  # same decode surface as Decoder
+        else:
+            self.code = None
+            self._scheme = scheme
+            self.decoder = Decoder(scheme)
         self.c = np.asarray(c, dtype=np.float64)
-        if self.c.shape[0] != scheme.m:
+        if self.c.shape[0] != self.scheme.m:
             raise ValueError("throughput vector size != m")
         self.comm_time = comm_time
         self.wait_for_all = wait_for_all
-        self.decoder = Decoder(scheme)
-        self.loads = scheme.worker_load().astype(np.float64)
+
+    @property
+    def scheme(self) -> CodingScheme:
+        return self.code.scheme if self.code is not None else self._scheme
+
+    @property
+    def loads(self) -> np.ndarray:
+        # recomputed per access: elastic rebalance moves load between workers
+        return self.scheme.worker_load().astype(np.float64)
 
     def iteration(self, profile: StragglerProfile) -> IterationResult:
+        loads = self.loads  # one worker_load() scan per iteration
         rate = self.c / profile.slowdown  # inf slowdown -> rate 0
         with np.errstate(divide="ignore", invalid="ignore"):
-            compute = np.where(rate > 0, self.loads / np.maximum(rate, 1e-300), np.inf)
-        compute = np.where(self.loads == 0, 0.0, compute)
+            compute = np.where(rate > 0, loads / np.maximum(rate, 1e-300), np.inf)
+        compute = np.where(loads == 0, 0.0, compute)
         finish = compute + profile.extra_delay + self.comm_time
 
         if self.wait_for_all:

@@ -29,9 +29,6 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, CodingConfig, TrainConfig, cell_runnable, get_config, runnable_cells
-from repro.core.aggregator import make_plan, slot_weights
-from repro.core.coding import make_scheme
-from repro.core.decoding import Decoder
 from repro.launch.mesh import coded_workers, data_axes, make_production_mesh
 from repro.models.lm import LM, build_model
 from repro.models.sharding import activation_axes

@@ -3,12 +3,29 @@
 A function, not a module-level constant, so importing this module never
 touches jax device state (device count is locked at first backend init —
 dryrun.py must set XLA_FLAGS before this runs).
+
+``AxisType`` (explicit sharding-in-types) only exists on newer jax; on
+older releases (e.g. 0.4.x) every mesh axis is implicitly Auto, so the
+compat constructor simply omits the argument.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit Auto/Explicit/Manual axis types
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: all axes are Auto, no arg to pass
+    AxisType = None
+
+__all__ = ["AxisType", "make_auto_mesh", "make_production_mesh", "data_axes", "coded_workers"]
+
+
+def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with all-Auto axis types on any jax version."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,7 +35,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     DESIGN.md §3), 'data' (DP / coded workers / FSDP), 'model' (TP/EP)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:

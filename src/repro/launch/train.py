@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.configs import CodingConfig, TrainConfig, get_config
+from repro.core.registry import scheme_names
 from repro.core.straggler import (
     FaultModel,
     FixedDelayStragglers,
@@ -34,6 +35,7 @@ from repro.core.straggler import (
 from repro.data.pipeline import SyntheticData
 from repro.models.lm import build_model
 from repro.optim.adam import adamw_init
+from repro.train.engine import BACKENDS
 from repro.train.trainer import CodedTrainer, TrainerState
 
 
@@ -54,8 +56,12 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--scheme", default="heter_aware",
-                    choices=["heter_aware", "group_based", "cyclic", "naive", "fractional_repetition"])
+    ap.add_argument("--scheme", default="heter_aware", choices=list(scheme_names()))
+    # 'spmd' needs a multi-device mesh the CPU launcher doesn't build; use
+    # StepEngine(backend='spmd', mesh=...) programmatically (tests/spmd_driver.py)
+    ap.add_argument("--backend", default="fused",
+                    choices=[b for b in BACKENDS if b != "spmd"],
+                    help="gradient backend: fused (production) | reference (oracle)")
     ap.add_argument("--s", type=int, default=1)
     ap.add_argument("--m", type=int, default=4, help="coded workers")
     ap.add_argument("--part-mb", type=int, default=2)
@@ -85,6 +91,7 @@ def main(argv=None):
     trainer = CodedTrainer(
         model, coding, tc, m=args.m, part_mb=args.part_mb,
         straggler_model=straggler_from_args(args), true_speeds=speeds, rng=args.seed,
+        backend=args.backend,
     )
     data = SyntheticData(cfg, k=trainer.k, part_mb=args.part_mb, seq_len=args.seq_len, seed=args.seed)
 

@@ -1,4 +1,13 @@
-from repro.train.trainer import CodedTrainer, TrainerState
+from repro.train.elastic import ElasticController
+from repro.train.engine import BACKENDS, StepEngine, TrainerState
 from repro.train.serve import LMServer
+from repro.train.trainer import CodedTrainer
 
-__all__ = ["CodedTrainer", "TrainerState", "LMServer"]
+__all__ = [
+    "BACKENDS",
+    "CodedTrainer",
+    "ElasticController",
+    "LMServer",
+    "StepEngine",
+    "TrainerState",
+]

@@ -1,0 +1,79 @@
+"""ElasticController: throughput estimation + simulated cluster clock +
+the elastic re-encode policy (DESIGN.md §4).
+
+Owns the pieces of the control loop that are about the CLUSTER rather than
+the model: the ClusterSim that turns straggler profiles into per-worker
+finish times (the paper's measured quantity), the EWMA ThroughputEstimator
+fed by those observations, and the hysteresis policy deciding when the
+codec should re-encode.  The trainer calls three methods per step:
+``tick`` (clock), ``observe`` (estimation), ``maybe_rebalance`` (policy).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.codec import Codec
+from repro.core.simulator import ClusterSim, IterationResult
+from repro.core.straggler import StragglerProfile
+from repro.core.throughput import ThroughputEstimator
+
+__all__ = ["ElasticController"]
+
+
+class ElasticController:
+    """Rebalance policy + timing clock around one codec.
+
+    Args:
+      codec: the codec whose code is re-encoded on drift.  The ClusterSim
+        holds the same GradientCode, so a rebalance is picked up in place
+        (shared decode cache included) — no sim rebuild.
+      true_speeds: (m,) ground-truth worker throughputs driving the clock.
+        The estimator only ever sees *observations*, so estimation error
+        (the paper's §V motivation) is reproducible.
+      comm_time: per-worker result upload seconds (simulated).
+      c_init: optional calibration prior for the estimator.
+    """
+
+    def __init__(
+        self,
+        codec: Codec,
+        *,
+        true_speeds: np.ndarray | None = None,
+        comm_time: float = 0.0,
+        c_init: np.ndarray | None = None,
+    ):
+        m = codec.m
+        self.codec = codec
+        self.true_speeds = (
+            np.asarray(true_speeds, np.float64) if true_speeds is not None else np.ones(m)
+        )
+        self.estimator = ThroughputEstimator(
+            m, init=np.asarray(c_init, np.float64) if c_init is not None else np.ones(m)
+        )
+        self.sim = ClusterSim(
+            codec.code, self.true_speeds, comm_time=comm_time,
+            wait_for_all=codec.code.wait_for_all,
+        )
+
+    def tick(self, profile: StragglerProfile) -> IterationResult:
+        """Simulate one BSP iteration's clock for a straggler profile."""
+        return self.sim.iteration(profile)
+
+    def observe(self, finish_times: np.ndarray) -> None:
+        """Fold observed per-worker finish times into the EWMA estimate
+        (full stragglers — inf/nan — are not folded in)."""
+        self.estimator.update(finish_times, self.codec.code.worker_load())
+
+    def maybe_rebalance(self, step: int, every: int) -> bool:
+        """Elastic re-encode when due, supported, and drifted past the
+        hysteresis band.  Returns True when the codec was re-encoded."""
+        if every <= 0 or step % every != 0:
+            return False
+        if not self.codec.code.supports_rebalance:
+            return False
+        if not self.estimator.should_rebalance():
+            return False
+        self.codec.rebalance(self.estimator.normalized())
+        self.estimator.mark_applied()
+        return True

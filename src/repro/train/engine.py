@@ -1,0 +1,213 @@
+"""StepEngine: the coded training step behind one of three interchangeable
+gradient backends (DESIGN.md §3).
+
+  - ``fused``     — production path.  Encode/decode folded into per-sequence
+                    loss weights; ONE jitted fwd/bwd + AdamW with donated
+                    buffers; XLA's DP reduction *is* the decode.
+  - ``reference`` — the paper's protocol verbatim (O(m·n) backward passes,
+                    python loops).  Oracle for tests/debugging; applies the
+                    same AdamW update so whole-run comparisons work.
+  - ``spmd``      — the faithful shard_map protocol on a mesh: per-worker
+                    encode, optional int8 wire compression, scaled-psum
+                    decode.  For protocol benchmarks and compression runs.
+
+All backends consume the same inputs — partition-major host batch +
+decode vector from the :class:`~repro.core.codec.Codec` — and produce the
+same decoded mean gradient (property-tested across every registered
+scheme), so swapping the execution backend is a constructor argument, not
+a code change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core.aggregator import (
+    faithful_spmd_step,
+    protocol_reference,
+    slot_weights,
+)
+from repro.core.codec import Codec
+from repro.optim.adam import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import cosine_warmup
+
+PyTree = Any
+
+BACKENDS = ("reference", "fused", "spmd")
+
+__all__ = ["BACKENDS", "TrainerState", "StepEngine"]
+
+
+@dataclasses.dataclass
+class TrainerState:
+    params: PyTree
+    opt: AdamWState
+    step: int
+
+
+class StepEngine:
+    """Jitted coded train step over a model + codec, backend-selectable.
+
+    ``model`` must expose ``init(rng) -> params`` and
+    ``weighted_loss(params, batch) -> scalar`` where ``batch["weight"]``
+    holds per-sequence loss weights (the LM contract; tests use tiny
+    duck-typed models).  Shapes fed to the jitted path are fixed by the
+    codec's slot capacity, so elastic re-encodes never recompile.
+    """
+
+    def __init__(
+        self,
+        model,
+        train_cfg: TrainConfig,
+        codec: Codec,
+        *,
+        backend: str = "fused",
+        mesh: jax.sharding.Mesh | None = None,
+        coding_axes: tuple[str, ...] = ("data",),
+        compress: bool = False,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+        if backend == "spmd" and mesh is None:
+            raise ValueError("backend='spmd' needs a mesh")
+        self.model = model
+        self.tc = train_cfg
+        self.codec = codec
+        self.backend = backend
+        self.mesh = mesh
+        self.coding_axes = coding_axes
+        self.compress = compress
+
+        self._fused_step = jax.jit(self._make_fused_step(), donate_argnums=(0, 1))
+        if backend != "fused":
+            self._loss_fwd = jax.jit(model.weighted_loss)
+            self._apply = jax.jit(self._make_apply(), donate_argnums=(0, 1))
+        if backend == "spmd":
+            self._spmd_grads = jax.jit(
+                faithful_spmd_step(self._slot_loss, mesh, coding_axes, compress=compress)
+            )
+            self._err = None  # per-worker error feedback, built lazily
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self, rng: jax.Array) -> TrainerState:
+        params = self.model.init(rng)
+        return TrainerState(params=params, opt=adamw_init(params), step=0)
+
+    # -- loss adapters ------------------------------------------------------
+
+    def _slot_loss(self, params: PyTree, micro_batch: PyTree) -> jnp.ndarray:
+        """Unweighted mean loss over one partition micro-batch — the
+        per-worker loss the protocol backends differentiate."""
+        mb = jax.tree.leaves(micro_batch)[0].shape[0]
+        w = jnp.full((mb,), 1.0 / mb, jnp.float32)
+        return self.model.weighted_loss(params, {**micro_batch, "weight": w})
+
+    def _flat_batch(self, partition_batch: dict[str, np.ndarray], a: np.ndarray) -> dict:
+        """Host-side pack: partition-major (k, mb, ...) -> flat coded batch
+        (m·n_slots·mb, ...) with decode/encode folded into per-seq weights."""
+        plan = self.codec.plan
+        idx = plan.slot_pids.reshape(-1)  # (m*n_slots,)
+        out = {}
+        mb = None
+        for key, arr in partition_batch.items():
+            g = arr[idx]  # (m*n_slots, mb, ...)
+            mb = arr.shape[1]
+            out[key] = g.reshape((-1,) + arr.shape[2:])
+        w = slot_weights(plan, a)  # (m, n_slots), includes the 1/k
+        out["weight"] = (np.repeat(w.reshape(-1), mb) / mb).astype(np.float32)
+        return out
+
+    # -- step functions -----------------------------------------------------
+
+    def _lr(self, step):
+        return cosine_warmup(
+            step, base_lr=self.tc.lr, warmup_steps=self.tc.warmup_steps,
+            total_steps=self.tc.total_steps,
+        )
+
+    def _make_fused_step(self):
+        tc = self.tc
+
+        def step_fn(params, opt, batch, step):
+            loss, grads = jax.value_and_grad(self.model.weighted_loss)(params, batch)
+            lr = self._lr(step)
+            gnorm = global_norm(grads)
+            params, opt = adamw_update(
+                params, grads, opt,
+                lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+            )
+            return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+        return step_fn
+
+    def _make_apply(self):
+        """Optimizer update for backends that produce grads out-of-line."""
+        tc = self.tc
+
+        def apply_fn(params, opt, grads, step):
+            lr = self._lr(step)
+            gnorm = global_norm(grads)
+            params, opt = adamw_update(
+                params, grads, opt,
+                lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+            )
+            return params, opt, {"grad_norm": gnorm, "lr": lr}
+
+        return apply_fn
+
+    # -- gradients (backend seam, used directly by the equivalence tests) ---
+
+    def gradients(self, params: PyTree, partition_batch: dict, a: np.ndarray) -> PyTree:
+        """Decoded mean gradient under decode vector ``a`` via the engine's
+        backend.  All backends agree to float tolerance by construction."""
+        if self.backend == "fused":
+            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            _, grads = jax.value_and_grad(self.model.weighted_loss)(params, batch)
+            return grads
+        if self.backend == "reference":
+            decoded, _ = protocol_reference(
+                self._slot_loss, params, partition_batch, self.codec.scheme, decode_vec=a
+            )
+            return decoded
+        # spmd: shard the slot batch over the coding axes and psum-decode
+        plan = self.codec.plan
+        sb = self.codec.pack(jax.tree.map(jnp.asarray, partition_batch))
+        coeff = jnp.asarray(plan.slot_coeff * plan.slot_mask)
+        a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
+        if self._err is None:
+            self._err = jax.tree.map(
+                lambda p: jnp.zeros((self.codec.m,) + p.shape, jnp.float32), params
+            )
+        grads, self._err = self._spmd_grads(params, sb, coeff, a_dev, self._err)
+        return grads
+
+    # -- the train step -----------------------------------------------------
+
+    def step(
+        self, state: TrainerState, partition_batch: dict[str, np.ndarray], a: np.ndarray
+    ) -> tuple[TrainerState, dict[str, float]]:
+        """One optimizer step from a partition-major batch + decode vector."""
+        if self.backend == "fused":
+            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            params, opt, metrics = self._fused_step(
+                state.params, state.opt, batch, jnp.asarray(state.step)
+            )
+        else:
+            grads = self.gradients(state.params, partition_batch, a)
+            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            loss = self._loss_fwd(state.params, batch)
+            params, opt, metrics = self._apply(
+                state.params, state.opt, grads, jnp.asarray(state.step)
+            )
+            metrics = {**metrics, "loss": loss}
+        new_state = TrainerState(params=params, opt=opt, step=state.step + 1)
+        return new_state, {k: float(v) for k, v in metrics.items()}

@@ -1,55 +1,42 @@
 """BSP trainer with heterogeneity-aware coded gradient aggregation.
 
-Per-step protocol (paper §III-A mapped to SPMD, see DESIGN.md §3):
+``CodedTrainer`` is a thin composition of the three runtime seams
+(DESIGN.md §2–§4):
 
-  1. host: sample/observe the straggler pattern; workers past the deadline
-     are excluded this step.
-  2. host: solve the decode vector `a` for the available set (LRU-cached,
-     group fast path) and fold it into per-sequence loss weights.
-  3. device: ONE jitted fused step — weighted fwd/bwd + XLA's DP reduction
-     (which *is* the decode) + AdamW.  No recompilation ever: elastic
-     re-encodes only change the *values* of the weight/slot tensors, never
-     their shapes (fixed slot capacity).
-  4. host: fold observed per-worker times into the EWMA throughput estimate;
-     when the estimate drifts, rebuild allocation+Alg.1 (milliseconds) and
-     carry on — this is the elastic-scaling / heterogeneity-adaptation loop.
+  - :class:`~repro.core.codec.Codec` — gradient code (via the registry) +
+    shape-stable slot plan + decode;
+  - :class:`~repro.train.engine.StepEngine` — the jitted step behind one
+    of the ``reference`` / ``fused`` / ``spmd`` backends;
+  - :class:`~repro.train.elastic.ElasticController` — simulated cluster
+    clock, EWMA throughput estimation, elastic re-encode policy.
+
+Per-step protocol (paper §III-A mapped to SPMD, see DESIGN.md §3):
+sample/observe the straggler pattern → exclude workers past the deadline →
+decode vector for the available set → one engine step (fused: a single
+jitted fwd/bwd + AdamW; elastic re-encodes only ever change tensor
+*values*, never shapes) → fold observed times into the throughput estimate
+and re-encode when it drifts.
 
 Timing: on this CPU container wall-clock heterogeneity cannot be measured,
-so a ClusterSim models per-worker clocks from the same straggler profiles
-the numerics use; `metrics["sim_iter_time"]` is the paper's
-"avg time per iteration".
+so the controller's ClusterSim models per-worker clocks from the same
+straggler profiles the numerics use; ``metrics["sim_iter_time"]`` is the
+paper's "avg time per iteration".
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import partial
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CodingConfig, ModelConfig, TrainConfig
-from repro.core.aggregator import CodedPlan, make_plan
-from repro.core.coding import CodingScheme, make_scheme
-from repro.core.decoding import DecodeError, Decoder
-from repro.core.simulator import ClusterSim
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core.codec import Codec
+from repro.core.decoding import DecodeError
 from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
-from repro.core.throughput import ThroughputEstimator
 from repro.models.lm import LM
-from repro.optim.adam import AdamWState, adamw_init, adamw_update, global_norm
-from repro.optim.schedules import cosine_warmup
+from repro.train.elastic import ElasticController
+from repro.train.engine import StepEngine, TrainerState
 
-PyTree = Any
-
-
-@dataclasses.dataclass
-class TrainerState:
-    params: PyTree
-    opt: AdamWState
-    step: int
+__all__ = ["CodedTrainer", "TrainerState"]
 
 
 class CodedTrainer:
@@ -57,8 +44,7 @@ class CodedTrainer:
 
     On a mesh, ``m`` = product of the coding-axis sizes; standalone (CPU
     tests, benchmarks) ``m`` is free.  ``true_speeds`` drive the timing
-    simulation; the throughput *estimator* only sees observations, so
-    estimation error (the §V motivation for group-based) is reproducible.
+    simulation; the throughput *estimator* only sees observations.
     """
 
     def __init__(
@@ -75,101 +61,38 @@ class CodedTrainer:
         comm_time: float = 0.0,
         c_init: np.ndarray | None = None,
         rng: int = 0,
+        backend: str = "fused",
     ):
         self.model = model
         self.coding = coding
-        self.train_cfg = train
         self.m = m
-        self.k = m * coding.partitions_per_worker
         self.part_mb = part_mb
-        self.mesh = mesh
         self.straggler_model = straggler_model or NoStragglers()
-        self.true_speeds = (
-            np.asarray(true_speeds, np.float64) if true_speeds is not None else np.ones(m)
-        )
         self._rng = np.random.default_rng(rng)
-        self._coding_rng = np.random.default_rng(rng + 1)
 
-        self.estimator = ThroughputEstimator(
-            m, init=np.asarray(c_init, np.float64) if c_init is not None else np.ones(m)
+        self.codec = Codec.from_config(coding, m=m, c_init=c_init, rng=rng + 1)
+        self.engine = StepEngine(
+            model, train, self.codec, backend=backend, mesh=mesh,
+            coding_axes=coding.coding_axes if mesh is not None else ("data",),
+            compress=coding.compress,
         )
-        # fixed slot capacity: worst-case allocation + 25% drift headroom;
-        # re-allocations are CAPPED at this load so shapes never change.
-        # With a calibration estimate (c_init), capacity is planned from the
-        # fastest worker's ideal share instead of the uniform share.
-        if c_init is not None:
-            cal = np.asarray(c_init, np.float64)
-            base = math.ceil(self.k * (coding.s + 1) * float(cal.max()) / float(cal.sum()))
-        else:
-            base = math.ceil(self.k * (coding.s + 1) / m)
-        self.n_slots = min(self.k, max(base + 1, math.ceil(base * 1.25)))
-        self.scheme: CodingScheme = self._build_scheme(self.estimator.normalized())
-        # schemes with structural k (naive/cyclic/frs use k=m) override the request
-        self.k = self.scheme.k
-        self.decoder = Decoder(self.scheme)
-        self.plan: CodedPlan = make_plan(self.scheme, self.n_slots)
-        self.sim = ClusterSim(self.scheme, self.true_speeds, comm_time=comm_time,
-                              wait_for_all=(coding.scheme == "naive"))
-        self._step_fn = self._make_step_fn()
-
-    # ------------------------------------------------------------------
-
-    def _build_scheme(self, c: np.ndarray) -> CodingScheme:
-        return make_scheme(
-            self.coding.scheme, self.m, self.k, self.coding.s, c,
-            rng=self._coding_rng, max_load=self.n_slots,
+        self.elastic = ElasticController(
+            self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init
         )
 
-    def rebuild_scheme(self, c: np.ndarray) -> None:
-        """Elastic re-encode: new allocation + Alg.1 from fresh estimates.
-        Host-side only; shapes are stable so no recompilation."""
-        self.scheme = self._build_scheme(c)
-        self.decoder = Decoder(self.scheme)
-        self.plan = make_plan(self.scheme, self.n_slots)
-        self.sim = ClusterSim(self.scheme, self.true_speeds, comm_time=self.sim.comm_time,
-                              wait_for_all=(self.coding.scheme == "naive"))
-        self.estimator.mark_applied()
-
-    # ------------------------------------------------------------------
-
-    def _make_step_fn(self):
-        model, tc = self.model, self.train_cfg
-
-        def step_fn(params, opt, batch, step):
-            loss, grads = jax.value_and_grad(model.weighted_loss)(params, batch)
-            lr = cosine_warmup(
-                step, base_lr=tc.lr, warmup_steps=tc.warmup_steps, total_steps=tc.total_steps
-            )
-            gnorm = global_norm(grads)
-            params, opt = adamw_update(
-                params, grads, opt,
-                lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
-                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
-            )
-            return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
-
-        return jax.jit(step_fn, donate_argnums=(0, 1))
-
-    # ------------------------------------------------------------------
+    # convenience views (stable public surface; tests/examples rely on them)
+    k = property(lambda self: self.codec.k)
+    scheme = property(lambda self: self.codec.scheme)
+    plan = property(lambda self: self.codec.plan)
+    n_slots = property(lambda self: self.codec.n_slots)
 
     def init_state(self, rng: jax.Array) -> TrainerState:
-        params = self.model.init(rng)
-        opt = adamw_init(params)
-        return TrainerState(params=params, opt=opt, step=0)
+        return self.engine.init_state(rng)
 
-    # ------------------------------------------------------------------
-
-    def _pack(self, partition_batch: dict[str, np.ndarray], seq_weights_scale: np.ndarray):
-        """Host-side: partition-major (k, mb, ...) -> flat coded batch with
-        per-sequence weights (m*n_slots*mb, ...)."""
-        idx = self.plan.slot_pids.reshape(-1)  # (m*n_slots,)
-        out = {}
-        for key, arr in partition_batch.items():
-            g = arr[idx]  # (m*n_slots, mb, ...)
-            out[key] = g.reshape((-1,) + arr.shape[2:])
-        w = np.repeat(seq_weights_scale.reshape(-1), self.part_mb) / self.part_mb
-        out["weight"] = w.astype(np.float32)
-        return out
+    def rebuild_scheme(self, c: np.ndarray) -> None:
+        """Manual elastic re-encode (host-side, shape-stable)."""
+        self.codec.rebalance(c)
+        self.elastic.estimator.mark_applied()
 
     def step(
         self, state: TrainerState, partition_batch: dict[str, np.ndarray],
@@ -179,51 +102,39 @@ class CodedTrainer:
             profile = self.straggler_model.sample(self.m, self._rng)
 
         # --- timing model (what the paper measures) ---
-        itres = self.sim.iteration(profile)
-
-        # --- straggler exclusion + decode ---
+        itres = self.elastic.tick(profile)
         finish = itres.finish
-        if np.isfinite(itres.T):
+        decode_ok = bool(np.isfinite(itres.T))
+        if decode_ok:
             available = sorted(itres.used)
-            decode_ok = True
         else:
-            available, decode_ok = [], False
-        if not decode_ok:
             # >s stragglers and no decodable set: BSP must wait for everyone
             # still alive (paper's naive fallback); dead workers excluded.
             available = [i for i in range(self.m) if np.isfinite(finish[i])]
         try:
-            a = self.decoder.decode_vector(available)
+            a = self.codec.decode_vector(available)
         except DecodeError:
-            # cannot decode at all (e.g. naive + fault): skip the update
+            # cannot decode at all (e.g. naive + fault): skip the update;
+            # full metric key set so consumers can log unconditionally
             return state, {
-                "loss": float("nan"), "skipped": 1.0,
-                "sim_iter_time": float("inf"), "n_stragglers": float(len(profile.straggler_set())),
+                "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
+                "skipped": 1.0, "sim_iter_time": float("inf"),
+                "n_stragglers": float(len(profile.straggler_set())),
+                "n_used": 0.0,
             }
 
-        weights = (a[:, None] * self.plan.slot_coeff * self.plan.slot_mask) / self.k
-        batch = self._pack(partition_batch, weights)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-
-        params, opt, metrics = self._step_fn(state.params, state.opt, batch, jnp.asarray(state.step))
-        new_state = TrainerState(params=params, opt=opt, step=state.step + 1)
+        new_state, metrics = self.engine.step(state, partition_batch, a)
 
         # --- throughput estimation + elastic re-encode ---
-        self.estimator.update(finish, self.scheme.worker_load())
+        self.elastic.observe(finish)
         out = {
-            "loss": float(metrics["loss"]),
-            "grad_norm": float(metrics["grad_norm"]),
-            "lr": float(metrics["lr"]),
-            "sim_iter_time": float(itres.T) if decode_ok else float(np.max(finish[available])) if available else float("inf"),
+            **metrics,
+            "sim_iter_time": float(itres.T) if decode_ok
+            else float(np.max(finish[available])) if available else float("inf"),
             "n_stragglers": float(len(profile.straggler_set())),
             "n_used": float(len(available)),
             "skipped": 0.0,
         }
-        if (
-            new_state.step % self.coding.rebalance_every == 0
-            and self.coding.scheme in ("heter_aware", "group_based")
-            and self.estimator.should_rebalance()
-        ):
-            self.rebuild_scheme(self.estimator.normalized())
+        if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
             out["rebalanced"] = 1.0
         return new_state, out

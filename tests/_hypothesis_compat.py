@@ -1,0 +1,117 @@
+"""Seeded-random fallback for the tiny slice of the hypothesis API the
+property tests use, so they still RUN (not skip) on images without
+hypothesis installed.
+
+Semantics: ``@given(*strategies)`` draws ``max_examples`` tuples from a
+deterministic per-test rng and calls the test once per draw.  No shrinking,
+no example database — failures report the drawn values verbatim.  Install
+``hypothesis`` (``pip install -e .[test]``) for the real thing.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+__all__ = ["given", "settings", "st", "HYPOTHESIS_INSTALLED"]
+
+HYPOTHESIS_INSTALLED = False
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw function rng -> value, composable via flatmap/map."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def flatmap(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+    def map(self, fn) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class st:
+    """Stand-in for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the test function for ``given`` to read."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Calls the test once per seeded draw of the strategy tuple."""
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        # like hypothesis, strategies fill the RIGHTMOST params; anything
+        # left over is a pytest fixture and stays visible to collection
+        fixture_params = params[: len(params) - len(strategies)]
+        drawn_names = [p.name for p in params[len(fixture_params):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            # stable per-test seed so failures reproduce across runs
+            seed = np.frombuffer(fn.__qualname__.encode(), dtype=np.uint8).sum()
+            rng = np.random.default_rng(int(seed))
+            for i in range(n):
+                drawn = tuple(s.example(rng) for s in strategies)
+                try:
+                    fn(*args, **kwargs, **dict(zip(drawn_names, drawn)))
+                except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on fallback example {i}: {drawn!r}"
+                    ) from e
+
+        # hide the strategy-filled params from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        return wrapper
+
+    return deco

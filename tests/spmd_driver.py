@@ -13,8 +13,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType, NamedSharding  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import make_auto_mesh  # noqa: E402 (AxisType compat)
 
 
 def _toy():
@@ -36,7 +38,7 @@ def check_faithful_spmd():
     from repro.core import Decoder, build_heter_aware
     from repro.core.aggregator import faithful_spmd_step, make_plan, pack_coded_batch
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     loss_fn, params, r = _toy()
     params = jax.device_put(
         params,
@@ -97,7 +99,7 @@ def check_fused_sharded_equals_host():
     vg = jax.jit(fused_coded_value_and_grad(loss_fn))
     _, g_host = vg(params, sb, w)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     sb_sh = jax.device_put(sb, NamedSharding(mesh, P("data")))
     w_sh = jax.device_put(w, NamedSharding(mesh, P("data")))
     p_sh = jax.device_put(params, NamedSharding(mesh, P()))
@@ -107,6 +109,44 @@ def check_fused_sharded_equals_host():
         # expected, 1e-4 relative is
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-3, atol=2e-5)
     print("fused sharded ok")
+
+
+def check_engine_spmd():
+    """StepEngine's 'spmd' backend (shard_map protocol) matches the
+    'reference' oracle on a real 4x2 mesh."""
+    import jax.numpy as jnp
+    from repro.configs.base import TrainConfig
+    from repro.core import Codec, get_scheme
+    from repro.train.engine import StepEngine
+
+    class Toy:
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            return {
+                "w1": jax.random.normal(k1, (4, 16), jnp.float32),
+                "w2": jax.random.normal(k2, (16, 1), jnp.float32),
+            }
+
+        def weighted_loss(self, params, batch):
+            pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+            return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
+    model = Toy()
+    codec = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=[1, 2, 3, 2], rng=0))
+    r = np.random.default_rng(0)
+    pb = {
+        "x": r.normal(size=(8, 2, 4)).astype(np.float32),
+        "y": r.normal(size=(8, 2)).astype(np.float32),
+    }
+    a = codec.decode_vector([0, 2, 3])
+    params = model.init(jax.random.PRNGKey(0))
+    tc = TrainConfig()
+    g_spmd = StepEngine(model, tc, codec, backend="spmd", mesh=mesh).gradients(params, pb, a)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    for x, y in zip(jax.tree.leaves(g_spmd), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    print("engine spmd ok")
 
 
 def check_dryrun_small():
@@ -124,7 +164,7 @@ def check_dryrun_small():
 
     cfg = get_config("llama3.2-1b").reduced()
     model = build_model(cfg)
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pspecs = model.param_specs(tp_axis="model", tp_size=2)
     params_in = jax.tree.map(
@@ -163,5 +203,6 @@ if __name__ == "__main__":
     {
         "faithful_spmd": check_faithful_spmd,
         "fused_sharded": check_fused_sharded_equals_host,
+        "engine_spmd": check_engine_spmd,
         "dryrun_small": check_dryrun_small,
     }[sys.argv[1]]()

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import Decoder, build_cyclic, build_group_based, build_heter_aware
 from repro.core.aggregator import (
@@ -105,8 +109,10 @@ def test_fused_equals_protocol_random_schemes(seed):
     _, grads = jax.jit(fused_coded_value_and_grad(_toy_loss))(
         params, pack_coded_batch(pb, plan), jnp.asarray(w)
     )
-    assert _trees_close(grads, ref)
-    assert _trees_close(grads, gt)
+    # wider tolerance: random seeds can draw near-singular C_i whose large
+    # B coefficients amplify f32 rounding (see _trees_close note)
+    assert _trees_close(grads, ref, atol=1e-4, rtol=1e-3)
+    assert _trees_close(grads, gt, atol=1e-4, rtol=1e-3)
 
 
 def test_uniform_weights_is_plain_dp():

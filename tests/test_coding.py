@@ -4,7 +4,11 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     Decoder,

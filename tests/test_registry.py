@@ -1,0 +1,268 @@
+"""The PR-1 API seams: GradientCode registry, Codec slot planning, elastic
+decode-cache invalidation, and backend equivalence (fused vs the paper's
+protocol oracle) for every registered scheme."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core import (
+    Codec,
+    GradientCode,
+    get_scheme,
+    make_scheme,
+    register_scheme,
+    satisfies_condition1,
+    scheme_class,
+    scheme_names,
+)
+from repro.train.engine import StepEngine
+
+ALL_SCHEMES = list(scheme_names())
+_C4 = [1.0, 2.0, 3.0, 2.0]
+
+
+def _build(name: str, m: int = 4, seed: int = 0) -> GradientCode:
+    s = 0 if name == "naive" else 1
+    return get_scheme(name, m=m, k=2 * m, s=s, c=_C4[:m], rng=seed)
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+def test_registry_roundtrip(name):
+    """Every registered scheme constructs, declares its k, and decodes."""
+    code = _build(name)
+    cls = scheme_class(name)
+    assert isinstance(code, cls) and cls.name == name
+    # structural-k declaration matches construction, and is known pre-build
+    expected_k = code.m if cls.structural_k else 2 * code.m
+    assert code.k == expected_k == cls.effective_k(code.m, 2 * code.m)
+    assert satisfies_condition1(code.B, code.scheme.s)
+    # full-availability decode always recovers the all-ones combination
+    a = code.decode_vector(range(code.m))
+    assert np.allclose(a @ code.B, 1.0, atol=1e-6)
+
+
+def test_unknown_scheme_raises():
+    with pytest.raises(ValueError, match="unknown scheme"):
+        get_scheme("definitely_not_registered", m=4, s=1)
+    with pytest.raises(ValueError, match="unknown scheme"):
+        scheme_class("definitely_not_registered")
+
+
+def test_register_rejects_non_gradient_code():
+    with pytest.raises(TypeError):
+        register_scheme("bogus")(object)
+
+
+def test_registering_a_new_scheme_is_one_decorator():
+    """The extensibility claim: a new code family is subclass + decorator."""
+
+    @register_scheme("_test_clone")
+    class CloneCode(scheme_class("cyclic")):
+        pass
+
+    try:
+        code = get_scheme("_test_clone", m=4, s=1, rng=0)
+        assert code.k == 4 and satisfies_condition1(code.B, 1)
+    finally:
+        from repro.core import registry as _registry
+
+        del _registry._REGISTRY["_test_clone"]
+
+
+# ---------------------------------------------------------------------------
+# make_scheme shim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+def test_make_scheme_shim_equivalence(name):
+    """The deprecated factory returns byte-identical schemes to the registry
+    (same rng stream), so old callers see no behaviour change."""
+    s = 0 if name == "naive" else 1
+    with pytest.deprecated_call():
+        old = make_scheme(name, 4, 8, s, _C4, rng=7)
+    new = get_scheme(name, m=4, k=8, s=s, c=_C4, rng=7)
+    np.testing.assert_array_equal(old.B, new.B)
+    assert old.allocation == new.allocation
+    assert old.name == new.name == name
+
+
+# ---------------------------------------------------------------------------
+# decode cache across elastic rebalance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["heter_aware", "group_based"])
+def test_decode_cache_invalidated_by_rebalance(name):
+    code = _build(name)
+    avail = [0, 2, 3]
+    a1 = code.decode_vector(avail)
+    assert np.allclose(a1 @ code.B, 1.0, atol=1e-6)
+    # repeated decode hits the LRU — unless the scheme's group fast path
+    # answered, in which case the cache must stay untouched
+    before = code.decode_cache_info()
+    code.decode_vector(avail)
+    after = code.decode_cache_info()
+    if before.misses:
+        assert after.hits == before.hits + 1
+    else:
+        assert after.currsize == before.currsize == 0
+
+    B_old = code.B.copy()
+    code.rebalance([1.0, 1.0, 4.0, 4.0])
+    assert not np.allclose(code.B, B_old)  # really re-encoded
+    a2 = code.decode_vector(avail)
+    # stale cache would return a1, which does not decode the NEW B
+    assert np.allclose(a2 @ code.B, 1.0, atol=1e-6)
+
+
+def test_rebalance_noop_for_structural_schemes():
+    code = _build("cyclic")
+    B_old = code.B.copy()
+    code.rebalance([1.0, 1.0, 4.0, 4.0])
+    np.testing.assert_array_equal(code.B, B_old)
+
+
+def test_codec_caps_rebalance_at_slot_capacity():
+    """A directly-constructed Codec must cap re-allocations at its fixed
+    slot capacity: an extreme throughput skew may not grow any worker past
+    n_slots (which would change plan shapes / fail mid-rebalance)."""
+    codec = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=[1.0, 1.0, 1.0, 1.0], rng=0))
+    codec.rebalance([1.0, 1.0, 1.0, 10.0])  # uncapped would give worker 3 all 8
+    assert max(codec.code.allocation.counts) <= codec.n_slots
+    a = codec.decode_vector(range(4))
+    assert np.allclose(a @ codec.code.B, 1.0, atol=1e-6)
+
+
+def test_codec_shape_stable_across_rebalance():
+    codec = Codec.from_config(CodingConfig(scheme="heter_aware", s=1), m=4)
+    shape = codec.plan.slot_pids.shape
+    counts = codec.code.allocation.counts
+    codec.rebalance([1.0, 1.0, 4.0, 4.0])
+    assert codec.plan.slot_pids.shape == shape
+    assert codec.code.allocation.counts != counts
+
+
+# ---------------------------------------------------------------------------
+# slot-capacity bugfix: structural schemes get exact-fit plans
+# ---------------------------------------------------------------------------
+
+
+def test_structural_schemes_get_exact_slot_capacity():
+    """The old monolith sized slots from the REQUESTED k = m·ppw before the
+    structural override to k = m, padding naive/cyclic/FRS with zero-weight
+    slots (wasted compute).  Capacity must derive from the settled k."""
+    m = 8
+    naive = Codec.from_config(CodingConfig(scheme="naive", s=0, partitions_per_worker=2), m=m)
+    assert naive.k == m and naive.n_slots == 1  # was 3 pre-fix
+    for name in ("cyclic", "fractional_repetition"):
+        codec = Codec.from_config(CodingConfig(scheme=name, s=1, partitions_per_worker=2), m=m)
+        assert codec.k == m and codec.n_slots == 2  # exactly s+1, no padding
+    # rebalance-capable schemes keep drift headroom beyond their max load
+    het = Codec.from_config(CodingConfig(scheme="heter_aware", s=1, partitions_per_worker=2), m=4)
+    assert het.n_slots > max(het.code.allocation.counts) - 1
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence: fused == protocol oracle for every scheme
+# ---------------------------------------------------------------------------
+
+
+class _ToyModel:
+    """Duck-typed model exposing the StepEngine contract."""
+
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32),
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        per_seq = (pred[:, 0] - batch["y"]) ** 2
+        return jnp.sum(per_seq * batch["weight"])
+
+
+def _partition_batch(k, mb=3, d=4, seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "x": r.normal(size=(k, mb, d)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+def test_fused_matches_protocol_reference_all_schemes(name):
+    """Acceptance: fused-backend gradients == paper-protocol oracle for every
+    registered scheme under a sampled straggler pattern."""
+    model = _ToyModel()
+    s = 0 if name == "naive" else 1
+    codec = Codec(get_scheme(name, m=4, k=8, s=s, c=_C4, rng=0))
+    rng = np.random.default_rng(hash(name) % 2**32)
+    dead = [] if s == 0 else sorted(rng.choice(codec.m, size=s, replace=False).tolist())
+    avail = [i for i in range(codec.m) if i not in dead]
+    a = codec.decode_vector(avail)
+
+    params = model.init(jax.random.PRNGKey(0))
+    pb = _partition_batch(codec.k)
+    tc = TrainConfig()
+    g_fused = StepEngine(model, tc, codec, backend="fused").gradients(params, pb, a)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+
+    # both must equal the true mean gradient over all k partitions
+    truth = jax.tree.map(jnp.zeros_like, params)
+    for j in range(codec.k):
+        mb = pb["x"].shape[1]
+        batch_j = {
+            "x": jnp.asarray(pb["x"][j]),
+            "y": jnp.asarray(pb["y"][j]),
+            "weight": jnp.full((mb,), 1.0 / mb, jnp.float32),
+        }
+        g = jax.grad(model.weighted_loss)(params, batch_j)
+        truth = jax.tree.map(lambda acc, x: acc + x / codec.k, truth, g)
+
+    for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=2e-5, rtol=2e-4)
+    for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(truth)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=2e-5, rtol=2e-4)
+
+
+def test_engine_step_backends_agree_end_to_end():
+    """One full optimizer step (grads + AdamW) via fused and reference
+    backends yields the same parameters."""
+    model = _ToyModel()
+    codec_f = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=_C4, rng=0))
+    codec_r = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=_C4, rng=0))
+    tc = TrainConfig(lr=1e-2, warmup_steps=1, total_steps=4)
+    eng_f = StepEngine(model, tc, codec_f, backend="fused")
+    eng_r = StepEngine(model, tc, codec_r, backend="reference")
+    pb = _partition_batch(8)
+    a = codec_f.decode_vector([0, 1, 3])
+    s_f = eng_f.init_state(jax.random.PRNGKey(1))
+    s_r = eng_r.init_state(jax.random.PRNGKey(1))
+    s_f, m_f = eng_f.step(s_f, pb, a)
+    s_r, m_r = eng_r.step(s_r, pb, a)
+    assert m_f["loss"] == pytest.approx(m_r["loss"], rel=1e-5)
+    assert s_f.step == s_r.step == 1
+    for x, y in zip(jax.tree.leaves(s_f.params), jax.tree.leaves(s_r.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_engine_rejects_bad_backend():
+    model = _ToyModel()
+    codec = Codec(get_scheme("naive", m=4, s=0))
+    with pytest.raises(ValueError, match="unknown backend"):
+        StepEngine(model, TrainConfig(), codec, backend="warp")
+    with pytest.raises(ValueError, match="needs a mesh"):
+        StepEngine(model, TrainConfig(), codec, backend="spmd")

@@ -26,5 +26,9 @@ def test_fused_step_sharding_invariance():
     _run("fused_sharded")
 
 
+def test_engine_spmd_backend_matches_reference():
+    _run("engine_spmd")
+
+
 def test_dryrun_lowering_small_mesh():
     _run("dryrun_small")
