@@ -2,7 +2,7 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast bench quickstart
+.PHONY: test test-fast test-tier2 bench bench-smoke quickstart
 
 test:
 	./scripts/test.sh
@@ -10,7 +10,13 @@ test:
 test-fast:  ## skip the slow subprocess SPMD tests
 	./scripts/test.sh --ignore=tests/test_spmd.py
 
-bench:
+test-tier2:  ## tier-1 suite + benchmark smoke (what CI's tier-2 gate runs)
+	RUN_TIER2=1 ./scripts/test.sh
+
+bench:  ## full-scale benchmark run (slow)
+	PYTHONPATH=src:. python benchmarks/run.py
+
+bench-smoke:  ## CI-speed benchmark smoke: all sections incl. fig6, shrunk iters
 	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/run.py
 
 quickstart:

@@ -1,6 +1,9 @@
 """Benchmark driver — one section per paper table/figure + kernels + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (then detailed per-bench CSVs).
+Prints ``name,us_per_call,derived`` CSV rows (then detailed per-bench CSVs)
+and writes the same summary machine-readably to ``results/BENCH_run.json``
+(per-section us_per_call + full-precision derived claims) so the perf
+trajectory of the repo is diffable across commits.
 Env: BENCH_FAST=1 shrinks iteration counts for CI-speed runs.
 """
 
@@ -18,11 +21,11 @@ def _fast() -> bool:
 
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
-    from benchmarks import kernels_bench, roofline_table
+    from benchmarks import fig6_approx, kernels_bench, roofline_table
 
     t0 = time.time()
     all_rows = []
-    summary = []
+    summary = []  # (name, us_per_call, derived display string, claims dict)
 
     # --- Fig.2: delay sweep on Cluster-A ---
     t = time.time()
@@ -30,7 +33,7 @@ def main() -> None:
     claims = fig2_delay.derived_claims(rows)
     all_rows += rows
     summary.append(("fig2_delay", (time.time() - t) * 1e6 / max(len(rows), 1),
-                    ";".join(f"{k}={v:.2f}" for k, v in claims.items())))
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- Fig.3: clusters B/C/D ---
     t = time.time()
@@ -38,8 +41,9 @@ def main() -> None:
     all_rows += rows
     het = {r["cluster"]: r["mean_iter_s"] for r in rows if r["scheme"] == "heter_aware"}
     cyc = {r["cluster"]: r["mean_iter_s"] for r in rows if r["scheme"] == "cyclic"}
+    claims = {f"speedup_{c}": cyc[c] / het[c] for c in het}
     summary.append(("fig3_clusters", (time.time() - t) * 1e6 / max(len(rows), 1),
-                    ";".join(f"speedup_{c}={cyc[c]/het[c]:.2f}" for c in het)))
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- Fig.4: convergence vs SSP (real training) ---
     t = time.time()
@@ -48,22 +52,36 @@ def main() -> None:
     finals = {}
     for r in rows:
         finals[r["scheme"]] = (r["sim_time_s"], r["loss"])
+    claims = {}
+    for s, (tt, l) in finals.items():
+        claims[f"{s}_final_loss"] = l
+        claims[f"{s}_final_t_s"] = tt
     summary.append(("fig4_convergence", (time.time() - t) * 1e6 / max(len(rows), 1),
-                    ";".join(f"{s}:loss={l:.3f}@t={tt:.1f}s" for s, (tt, l) in finals.items())))
+                    ";".join(f"{s}:loss={l:.3f}@t={tt:.1f}s" for s, (tt, l) in finals.items()),
+                    claims))
 
     # --- Fig.5: resource usage ---
     t = time.time()
     rows = fig5_resource_usage.run(n_iters=50 if _fast() else 200)
     all_rows += rows
+    claims = {f"{r['scheme']}_resource_usage": r["resource_usage"] for r in rows}
     summary.append(("fig5_resource_usage", (time.time() - t) * 1e6 / max(len(rows), 1),
-                    ";".join(f"{r['scheme']}={r['resource_usage']:.2f}" for r in rows)))
+                    ";".join(f"{r['scheme']}={r['resource_usage']:.2f}" for r in rows), claims))
+
+    # --- Fig.6: approximate/deadline stepping under misestimation ---
+    t = time.time()
+    rows = fig6_approx.run(n_steps=16 if _fast() else 60)
+    claims = fig6_approx.derived_claims(rows)
+    all_rows += rows
+    summary.append(("fig6_approx", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- kernels ---
     t = time.time()
     rows = kernels_bench.run()
     all_rows += rows
     for r in rows:
-        summary.append((r["name"], r["us_per_call"], r["derived"]))
+        summary.append((r["name"], r["us_per_call"], r["derived"], {}))
 
     # --- roofline table from dry-run artifacts ---
     rows = roofline_table.run()
@@ -71,17 +89,32 @@ def main() -> None:
     if rows:
         worst = min(rows, key=lambda r: r["mfu_at_roofline"] or 0)
         summary.append(("roofline_cells", float(len(rows)),
-                        f"worst_mfu={worst['arch']}/{worst['shape']}={worst['mfu_at_roofline']:.4f}"))
+                        f"worst_mfu={worst['arch']}/{worst['shape']}={worst['mfu_at_roofline']:.4f}",
+                        {"n_cells": len(rows), "worst_mfu": worst["mfu_at_roofline"],
+                         "worst_cell": f"{worst['arch']}/{worst['shape']}"}))
 
     print("name,us_per_call,derived")
-    for name, us, derived in summary:
+    for name, us, derived, _ in summary:
         print(f"{name},{us:.2f},{derived}")
 
     os.makedirs("results", exist_ok=True)
     with open("results/bench_rows.json", "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
-    print(f"# {len(all_rows)} detail rows -> results/bench_rows.json "
-          f"(total {time.time() - t0:.1f}s)", file=sys.stderr)
+    # machine-readable perf trajectory: per-section us_per_call + the derived
+    # claims at full precision (the display strings above are rounded)
+    with open("results/BENCH_run.json", "w") as f:
+        json.dump({
+            "fast": _fast(),
+            "total_s": time.time() - t0,
+            "n_detail_rows": len(all_rows),
+            "sections": [
+                {"name": name, "us_per_call": float(us), "derived": derived, "claims": claims}
+                for name, us, derived, claims in summary
+            ],
+        }, f, indent=1, default=str)
+    print(f"# {len(all_rows)} detail rows -> results/bench_rows.json; "
+          f"summary -> results/BENCH_run.json (total {time.time() - t0:.1f}s)",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,11 @@
 # Tier-1 test gate: run from anywhere, extra pytest args pass through.
 #   ./scripts/test.sh                    # full suite
 #   ./scripts/test.sh tests/test_coding.py -k decode
+#   RUN_TIER2=1 ./scripts/test.sh        # + tier-2: benchmark smoke (fig2-6)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+if [[ "${RUN_TIER2:-0}" == "1" ]]; then
+  echo "== tier-2: benchmark smoke (BENCH_FAST=1 benchmarks/run.py) =="
+  make bench-smoke
+fi

@@ -1,0 +1,163 @@
+"""Deadline-driven inexact stepping (DESIGN.md §5).
+
+A :class:`DeadlinePolicy` decides *when* a BSP iteration steps and *what*
+decode it steps with, given the per-partition arrival clocks of one
+iteration (:class:`~repro.core.simulator.PartitionTimes`):
+
+- ``exact_first``     — wait for the earliest exact decodable moment (the
+  paper's Eq. 3 semantics); only if none arrives by the deadline, step
+  best-effort with whatever did.
+- ``bounded_residual`` — step at the first instant the best-effort decode's
+  RMS residual drops to ``target_residual`` (exact counts as 0); cap at the
+  deadline.  This is the noisy-estimate workhorse: it banks most of the
+  exactness while refusing to wait for the long tail.
+- ``fixed_deadline``  — always step at the deadline with whatever arrived.
+
+The deadline itself *adapts*: unless pinned via ``deadline_s``, it is
+``slack ×`` the iteration time the EWMA throughput estimates predict for an
+exact decode — so as the estimator converges on the true speeds, the
+deadline tightens around the genuinely achievable iteration time.
+
+Schemes declaring ``reports_partial_work`` are decoded from completed
+partition *prefixes* (``decode_partial`` over ``support_at``); all-or-
+nothing schemes are decoded from the finished-worker set through the
+scheme's cached ``decode_outcome`` path, so repeated straggler patterns hit
+the decode LRU even when inexact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.decoding import DecodeError, DecodeOutcome
+from repro.core.registry import GradientCode
+from repro.core.simulator import PartitionTimes
+
+__all__ = ["DEADLINE_MODES", "DeadlinePolicy", "DeadlineTick"]
+
+DEADLINE_MODES = ("exact_first", "bounded_residual", "fixed_deadline")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineTick:
+    """One deadline-policy iteration: chosen step time + decode outcome.
+
+    Attributes:
+      T: wall-clock instant the policy stepped at.
+      deadline: the deadline in force (adaptive or fixed).
+      outcome: the decode taken — exact or best-effort.
+      ptimes: the iteration's per-partition clocks (for metrics/debugging).
+      work_done: (m,) work observed by T — completed partitions, or for
+        ``censored`` workers the upper BOUND they provably failed to beat.
+      censored: (m,) True where ``work_done`` is a right-censored bound
+        (deadline-missers with no progress signal), not a real sample; the
+        estimator must only let it LOWER an estimate, never raise it.
+    """
+
+    T: float
+    deadline: float
+    outcome: DecodeOutcome
+    ptimes: PartitionTimes
+    work_done: np.ndarray
+    censored: np.ndarray
+
+
+@dataclasses.dataclass
+class DeadlinePolicy:
+    """When to step an iteration that may not decode exactly.
+
+    Args:
+      mode: one of :data:`DEADLINE_MODES`.
+      target_residual: RMS residual at which ``bounded_residual`` steps
+        (0 = wait for exact, i.e. ``exact_first`` with a cap).
+      slack: adaptive deadline = slack × EWMA-predicted exact iteration time.
+      deadline_s: fixed deadline override (seconds); None = adapt.
+      max_events: cap on candidate step instants evaluated per iteration
+        (each costs one lstsq); events are subsampled evenly beyond it.
+    """
+
+    mode: str = "bounded_residual"
+    target_residual: float = 0.2
+    slack: float = 1.5
+    deadline_s: float | None = None
+    max_events: int = 64
+
+    def __post_init__(self) -> None:
+        if self.mode not in DEADLINE_MODES:
+            raise ValueError(f"unknown deadline mode {self.mode!r}; choose from {DEADLINE_MODES}")
+        if self.target_residual < 0:
+            raise ValueError("target_residual must be >= 0")
+
+    # -- deadline adaptation -----------------------------------------------
+
+    def deadline_for(
+        self, code: GradientCode, c_est: np.ndarray, comm_time: float = 0.0
+    ) -> float:
+        """Deadline from the EWMA estimates: predicted per-worker finish
+        times under the current allocation, then the earliest exact-decode
+        instant those times imply, stretched by ``slack``."""
+        if self.deadline_s is not None:
+            return float(self.deadline_s)
+        loads = code.worker_load().astype(np.float64)
+        pred = loads / np.maximum(np.asarray(c_est, np.float64), 1e-12) + comm_time
+        try:
+            t, _ = code.earliest_decodable(pred)
+        except DecodeError:
+            t = float(np.max(pred))
+        return float(self.slack * t)
+
+    # -- per-iteration resolution ------------------------------------------
+
+    def _outcome_at(self, code: GradientCode, ptimes: PartitionTimes, t: float) -> DecodeOutcome:
+        """Best decode achievable at instant t: completed prefixes for
+        partial-work schemes, finished workers (LRU-cached) otherwise."""
+        if code.reports_partial_work:
+            return code.decode_partial(ptimes.support_at(t))
+        finished = [
+            w
+            for w in range(ptimes.m)
+            if len(ptimes.partitions[w]) and ptimes.finish[w] <= t
+        ]
+        return code.decode_outcome(finished)
+
+    def resolve(
+        self, code: GradientCode, ptimes: PartitionTimes, deadline: float
+    ) -> tuple[float, DecodeOutcome]:
+        """Pick (step time τ, decode outcome) for one iteration's clocks."""
+        if self.mode == "fixed_deadline":
+            return deadline, self._outcome_at(code, ptimes, deadline)
+
+        if self.mode == "exact_first":
+            try:
+                t, used = code.earliest_decodable(ptimes.finish)
+                if t <= deadline:
+                    return float(t), code.decode_outcome(used)
+            except DecodeError:
+                pass
+            return deadline, self._outcome_at(code, ptimes, deadline)
+
+        # bounded_residual: step at the first arrival event satisfying the
+        # bound.  The residual is NOT monotone in t (a completing partition
+        # can RAISE the lstsq misfit — heter-aware B has negative entries),
+        # so finding the earliest qualifying instant genuinely requires a
+        # forward scan; a bisection would skip qualifying events whenever a
+        # later event regresses past the target.  The scan exits at the
+        # first hit — cheap in the common early-step case — and events are
+        # evenly subsampled to max_events (endpoints kept) to bound the
+        # worst-case solve count.
+        events = ptimes.event_times(deadline)
+        if events.size > self.max_events:
+            idx = np.unique(np.linspace(0, events.size - 1, self.max_events).round().astype(int))
+            events = events[idx]
+        last: DecodeOutcome | None = None
+        for t in events:
+            last = self._outcome_at(code, ptimes, float(t))
+            if last.exact or last.residual <= self.target_residual:
+                return float(t), last
+        if last is not None:
+            # nothing qualified: nothing arrives in (events[-1], deadline],
+            # so the last event's (already solved) outcome IS the deadline's
+            return deadline, last
+        return deadline, self._outcome_at(code, ptimes, deadline)

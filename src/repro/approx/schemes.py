@@ -1,0 +1,113 @@
+"""The two approximate code families, registered as :class:`GradientCode`s.
+
+`bernoulli` — stochastic approximate coding (Johri et al.; Song & Choi):
+worker i holds each partition independently with probability
+``p_i = (s+1)·c_i/Σc`` (heterogeneity-aware: expected copies per partition
+= s+1, faster workers hold more).  Encoding coefficients are ``1/h_j``
+(h_j = realized holders of partition j), so the *full* worker set always
+decodes exactly with the all-ones vector, while straggler patterns decode
+best-effort with a residual that shrinks as coverage grows.  ``exact=False``:
+the runtime must not rely on ``a·B = 1`` existing for every ≤s pattern.
+
+`partial_work` — the paper's heter-aware code (Alg. 1) under a streaming
+report contract: workers upload each partition's coded contribution as it
+completes instead of all-or-nothing, declared via ``reports_partial_work``.
+The B matrix and exactness guarantee are heter_aware's; what changes is the
+*information set* a deadline decode sees — completed prefixes, masked into
+``B_eff`` by :meth:`GradientCode.decode_partial`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.allocation import Allocation
+from repro.core.coding import CodingScheme
+from repro.core.registry import GradientCode, register_scheme
+from repro.core.schemes import HeterAwareCode
+
+__all__ = ["BernoulliCode", "PartialWorkCode", "build_bernoulli"]
+
+
+def build_bernoulli(
+    k: int,
+    s: int,
+    c: Sequence[float],
+    rng: np.random.Generator | int | None = 0,
+    max_load: int | None = None,
+) -> CodingScheme:
+    """Heterogeneity-aware Bernoulli support + 1/h_j coefficients.
+
+    Every partition is guaranteed ≥1 holder (uncovered partitions are
+    patched onto throughput-weighted workers), per-worker load is capped at
+    ``max_load`` so elastic re-draws stay inside a fixed slot plan.  The
+    scheme's *guaranteed* tolerance is 0 — `s` only sizes the expected
+    replication — so the stored ``CodingScheme.s`` is 0.
+    """
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    c = np.asarray(c, dtype=np.float64)
+    m = c.shape[0]
+    if np.any(c <= 0):
+        raise ValueError("throughputs must be positive")
+    cap = k if max_load is None else min(k, int(max_load))
+    if m * cap < k:
+        raise ValueError(f"k={k} partitions cannot be covered with m={m}, max_load={cap}")
+    p = np.clip((s + 1) * c / c.sum(), 0.0, 1.0)
+    hold = rng.uniform(size=(m, k)) < p[:, None]
+    # cap per-worker load (drop a uniform subset of the excess)
+    for i in range(m):
+        held = np.flatnonzero(hold[i])
+        if held.size > cap:
+            drop = rng.choice(held, size=held.size - cap, replace=False)
+            hold[i, drop] = False
+    # guarantee coverage: patch uncovered partitions onto c-weighted workers
+    for j in np.flatnonzero(~hold.any(axis=0)):
+        room = hold.sum(axis=1) < cap
+        if not room.any():
+            # every worker at cap; m·cap ≥ k guarantees a redundant copy
+            # exists somewhere — free that slot first
+            h = hold.sum(axis=0)
+            ws, js = np.nonzero(hold & (h[None, :] >= 2))
+            pick = int(rng.integers(ws.size))
+            hold[ws[pick], js[pick]] = False
+            room = hold.sum(axis=1) < cap
+        w = c * room
+        i = int(rng.choice(m, p=w / w.sum()))
+        hold[i, j] = True
+    holders = hold.sum(axis=0)
+    B = np.where(hold, 1.0 / holders[None, :], 0.0)
+    parts = tuple(tuple(int(j) for j in np.flatnonzero(hold[i])) for i in range(m))
+    alloc = Allocation(
+        k=k, s=0, counts=tuple(len(ps) for ps in parts), partitions=parts
+    )
+    return CodingScheme(name="bernoulli", B=B, allocation=alloc, s=0)
+
+
+@register_scheme("bernoulli")
+class BernoulliCode(GradientCode):
+    """Stochastic approximate code: Bernoulli(p_i ∝ c_i) support, 1/h_j
+    coefficients.  Full availability decodes exactly (a = 1); anything less
+    is best-effort — pair with a :class:`~repro.approx.DeadlinePolicy`."""
+
+    exact = False
+    supports_rebalance = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return build_bernoulli(
+            self.requested_k, self.s, c, rng=self._rng, max_load=self.max_load
+        )
+
+
+@register_scheme("partial_work")
+class PartialWorkCode(HeterAwareCode):
+    """Heter-aware code (Alg. 1) whose workers report per-partition
+    completion instead of all-or-nothing: deadline decodes see completed
+    prefixes via ``decode_partial``.  Same B, same exactness guarantee."""
+
+    reports_partial_work = True
+
+    def build(self, c: np.ndarray) -> CodingScheme:
+        return dataclasses.replace(super().build(c), name="partial_work")

@@ -33,9 +33,15 @@ from repro.core.coding import (
     make_scheme,
     satisfies_condition1,
 )
-from repro.core.decoding import DecodeError, Decoder, solve_decode_vector
+from repro.core.decoding import (
+    DecodeError,
+    DecodeOutcome,
+    Decoder,
+    best_effort_decode_vector,
+    solve_decode_vector,
+)
 from repro.core.groups import build_group_based, find_all_groups, prune_groups
-from repro.core.simulator import ClusterSim, theoretical_optimal_time
+from repro.core.simulator import ClusterSim, PartitionTimes, theoretical_optimal_time
 from repro.core.straggler import (
     ComposedModel,
     FaultModel,
@@ -45,6 +51,11 @@ from repro.core.straggler import (
     TransientStragglers,
 )
 from repro.core.throughput import ThroughputEstimator
+
+# NOTE: the approximate families (bernoulli, partial_work) live in
+# repro.approx — a layer above core — and are pulled in lazily by the
+# registry on first scheme lookup (registry._load_family_modules), so
+# scheme_names() is complete everywhere without core importing upward.
 
 __all__ = [
     "GradientCode",
@@ -65,11 +76,14 @@ __all__ = [
     "make_scheme",
     "satisfies_condition1",
     "DecodeError",
+    "DecodeOutcome",
     "Decoder",
+    "best_effort_decode_vector",
     "solve_decode_vector",
     "find_all_groups",
     "prune_groups",
     "ClusterSim",
+    "PartitionTimes",
     "theoretical_optimal_time",
     "ComposedModel",
     "FaultModel",

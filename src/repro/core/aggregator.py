@@ -48,6 +48,7 @@ __all__ = [
     "CodedPlan",
     "make_plan",
     "slot_weights",
+    "support_slot_mask",
     "pack_coded_batch",
     "protocol_reference",
     "fused_coded_value_and_grad",
@@ -114,14 +115,33 @@ def make_plan(scheme: CodingScheme, n_slots: int | None = None) -> CodedPlan:
     return CodedPlan(slot_pids=pids, slot_mask=mask, slot_coeff=coeff, m=m, k=k, n_max=n_max)
 
 
-def slot_weights(plan: CodedPlan, decode_vec: np.ndarray) -> np.ndarray:
+def support_slot_mask(plan: CodedPlan, support: np.ndarray) -> np.ndarray:
+    """Slot-space view of an (m, k) partial-work completion mask: 1 where
+    the worker finished that slot's partition, re-masked by ``slot_mask``
+    because padding slots gather pid 0.  The single place the padding
+    invariant is encoded — used by the fused weights AND the spmd coeffs."""
+    done = np.asarray(support, np.float32)[np.arange(plan.m)[:, None], plan.slot_pids]
+    return done * plan.slot_mask
+
+
+def slot_weights(
+    plan: CodedPlan, decode_vec: np.ndarray, support: np.ndarray | None = None
+) -> np.ndarray:
     """Fused-path weights: W[w,s] = a_w · B[w, pid(w,s)] / k  (0 on padding).
 
     Σ_{w,s} W[w,s]·L_{pid(w,s)} = (1/k)·Σ_j (a·B)_j·L_j = mean partition loss,
     so its gradient is the decoded mean gradient.
+
+    ``support`` is the optional (m, k) partial-work completion mask (see
+    :class:`~repro.core.decoding.DecodeOutcome`): slots whose partition a
+    worker did not finish get weight 0, so the fused/spmd paths differentiate
+    exactly the work that exists — the inexact-decode contract.
     """
     a = np.asarray(decode_vec, dtype=np.float32).reshape(plan.m, 1)
-    return (a * plan.slot_coeff * plan.slot_mask / plan.k).astype(np.float32)
+    w = a * plan.slot_coeff * plan.slot_mask / plan.k
+    if support is not None:
+        w = w * support_slot_mask(plan, support)
+    return w.astype(np.float32)
 
 
 def uniform_weights(plan: CodedPlan) -> np.ndarray:
@@ -156,13 +176,16 @@ def protocol_reference(
     scheme: CodingScheme,
     available: Sequence[int] | None = None,
     decode_vec: np.ndarray | None = None,
+    support: np.ndarray | None = None,
 ) -> tuple[PyTree, list[PyTree]]:
     """Paper protocol, literally.  Returns (decoded mean gradient, [g̃_w]).
 
     Workers compute per-partition gradients, encode with their B row, the
     master decodes from the available set.  Not jitted end-to-end (python
     loops) — this is the oracle, not the fast path.  Pass ``decode_vec`` to
-    reuse a decode solved elsewhere (e.g. a GradientCode's fast path).
+    reuse a decode solved elsewhere (e.g. a GradientCode's fast path) and
+    ``support`` (m, k completion mask) for partial-work iterations: worker w
+    encodes only the partitions it finished, g̃_w = Σ_j B[w,j]·mask[w,j]·g_j.
     """
     m, k = scheme.m, scheme.k
     grad_fn = jax.jit(jax.grad(loss_fn))
@@ -173,7 +196,7 @@ def protocol_reference(
     for w in range(m):
         gw = jax.tree.map(jnp.zeros_like, params)
         for j in scheme.allocation.partitions[w]:
-            bwj = float(scheme.B[w, j])
+            bwj = float(scheme.B[w, j]) * (1.0 if support is None else float(support[w, j]))
             gw = jax.tree.map(lambda acc, g, b=bwj: acc + b * g, gw, part_grads[j])
         coded.append(gw)
     if decode_vec is not None:

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.aggregator import CodedPlan, make_plan, pack_coded_batch, slot_weights
 from repro.core.coding import CodingScheme
+from repro.core.decoding import DecodeOutcome
 from repro.core.registry import GradientCode, get_scheme, plan_slot_capacity, scheme_class
 
 if TYPE_CHECKING:  # avoid a hard configs dependency at import time
@@ -38,9 +39,11 @@ class Codec:
         n_max = max(1, max(code.allocation.counts))
         if n_slots is None:
             # rebalanceable codes keep headroom for allocation drift;
-            # structural ones never re-allocate, so exact fit is safe
+            # structural ones never re-allocate, so exact fit is safe.
+            # Stochastic supports (bernoulli) can overshoot the planned
+            # share, so the realized max always fits.
             n_slots = (
-                plan_slot_capacity(code.k, code.s, code.m, code.c)
+                max(plan_slot_capacity(code.k, code.s, code.m, code.c), n_max)
                 if code.supports_rebalance
                 else n_max
             )
@@ -102,9 +105,27 @@ class Codec:
     def decode_vector(self, available: Iterable[int]) -> np.ndarray:
         return self.code.decode_vector(available)
 
-    def slot_weights(self, decode_vec: np.ndarray) -> np.ndarray:
-        """(m, n_slots) fused-path weights a_w·B[w,pid]/k (0 on padding)."""
-        return slot_weights(self.plan, decode_vec)
+    def decode_outcome(self, available: Iterable[int]) -> DecodeOutcome:
+        """Exact-or-best-effort decode of an available set (never raises)."""
+        return self.code.decode_outcome(available)
+
+    def decode_partial(
+        self, support: np.ndarray, available: Iterable[int] | None = None
+    ) -> DecodeOutcome:
+        """Best-effort decode from an (m, k) partial-work completion mask."""
+        return self.code.decode_partial(support, available)
+
+    def slot_weights(self, decode: np.ndarray | DecodeOutcome) -> np.ndarray:
+        """(m, n_slots) fused-path weights a_w·B[w,pid]/k (0 on padding).
+
+        Accepts a bare decode vector or a :class:`DecodeOutcome`; the
+        outcome's partial-work ``support`` mask (if any) zeroes the slots of
+        unfinished partitions, so residual propagates into slot weights
+        exactly as DESIGN.md §5 specifies.
+        """
+        if isinstance(decode, DecodeOutcome):
+            return slot_weights(self.plan, decode.a, support=decode.support)
+        return slot_weights(self.plan, decode)
 
     def pack(self, partition_batch):
         """Partition-major (k, mb, ...) -> slot-major (m, n_slots, mb, ...)."""

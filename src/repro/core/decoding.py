@@ -14,10 +14,20 @@ O(mk²) — negligible next to a training step.
 The group-based scheme (§V) adds a fast path: if a *group* (workers whose
 partition arcs tile the dataset) is fully available, its decode vector is the
 0/1 indicator — no solve, fewest workers (Eq. 8).
+
+Inexact decoding (approx subsystem): when no exact set exists — too many
+stragglers, a mis-estimated allocation, or an intentionally approximate code
+— the same least squares still yields the *best-effort* decode, the ``a``
+minimizing ``‖a·B − 1‖₂``.  :func:`best_effort_decode_vector` packages it as
+a :class:`DecodeOutcome` (vector + ``exact`` flag + RMS residual) instead of
+raising, and accepts a per-entry ``support`` mask so partially-completed
+workers (partial-work codes) contribute exactly the partition prefix they
+finished.  The residual is what deadline policies bound (DESIGN.md §5).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import lru_cache
 from typing import Iterable, Sequence
 
@@ -25,13 +35,48 @@ import numpy as np
 
 from repro.core.coding import CodingScheme
 
-__all__ = ["DecodeError", "solve_decode_vector", "earliest_decodable_prefix", "Decoder"]
+__all__ = [
+    "DecodeError",
+    "DecodeOutcome",
+    "solve_decode_vector",
+    "best_effort_decode_vector",
+    "earliest_decodable_prefix",
+    "Decoder",
+]
 
 _ATOL = 1e-6
 
 
 class DecodeError(RuntimeError):
     """Raised when the available set cannot recover the aggregated gradient."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeOutcome:
+    """Result of one decode attempt, exact or best-effort.
+
+    Attributes:
+      a: (m,) decode vector; zeros outside the contributing workers.
+      exact: ``a·B_eff == 1`` to tolerance — the decoded gradient is the true
+        mean gradient.  ``residual == 0.0`` iff ``exact`` (same tolerance).
+      residual: RMS misfit ``‖a·B_eff − 1‖₂ / √k`` — 0 for exact decodes,
+        1 when nothing arrived (a = 0); deadline policies bound it.
+      support: optional (m, k) effective-B mask (1 = worker finished that
+        partition); ``None`` means full rows.  Slot-weight builders apply it
+        so unfinished partitions never enter the gradient.
+
+    Instances may be LRU-cached by the scheme — treat them as immutable,
+    arrays included.
+    """
+
+    a: np.ndarray
+    exact: bool
+    residual: float
+    support: np.ndarray | None = None
+
+    @property
+    def n_used(self) -> int:
+        return int(np.count_nonzero(np.abs(self.a) > 1e-12))
 
 
 def solve_decode_vector(
@@ -54,6 +99,43 @@ def solve_decode_vector(
     a = np.zeros(m, dtype=np.float64)
     a[avail] = x
     return a
+
+
+def best_effort_decode_vector(
+    B: np.ndarray,
+    available: Iterable[int] | None = None,
+    support: np.ndarray | None = None,
+    atol: float = _ATOL,
+) -> DecodeOutcome:
+    """Best-effort decode: the ``a`` minimizing ``‖a·B_eff − 1‖₂``.
+
+    ``B_eff = B * support`` when a (m, k) completion mask is given (partial
+    work), else ``B`` itself; rows outside ``available`` (default: all) are
+    excluded.  Never raises — an empty/useless available set yields
+    ``a = 0`` with residual 1.  ``exact`` uses the same per-component
+    tolerance as :func:`solve_decode_vector`, so the two paths agree on
+    which patterns are decodable.
+    """
+    m, k = B.shape
+    B_eff = B if support is None else B * np.asarray(support, np.float64)
+    avail = (
+        sorted(set(int(i) for i in available)) if available is not None else list(range(m))
+    )
+    # workers with no surviving coefficients contribute nothing to the solve
+    avail = [i for i in avail if np.any(B_eff[i])]
+    ones = np.ones(k, dtype=np.float64)
+    if not avail:
+        return DecodeOutcome(
+            a=np.zeros(m, dtype=np.float64), exact=False, residual=1.0, support=support
+        )
+    rows = B_eff[avail]
+    x, *_ = np.linalg.lstsq(rows.T, ones, rcond=None)
+    fit = rows.T @ x
+    exact = bool(np.allclose(fit, ones, atol=atol))
+    residual = 0.0 if exact else float(np.linalg.norm(fit - ones) / np.sqrt(k))
+    a = np.zeros(m, dtype=np.float64)
+    a[avail] = x
+    return DecodeOutcome(a=a, exact=exact, residual=residual, support=support)
 
 
 def earliest_decodable_prefix(

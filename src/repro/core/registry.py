@@ -27,6 +27,7 @@ five built-ins).
 from __future__ import annotations
 
 import abc
+import importlib
 import math
 from functools import lru_cache
 from typing import Callable, Iterable, Sequence
@@ -34,7 +35,12 @@ from typing import Callable, Iterable, Sequence
 import numpy as np
 
 from repro.core.coding import CodingScheme
-from repro.core.decoding import DecodeError, earliest_decodable_prefix, solve_decode_vector
+from repro.core.decoding import (
+    DecodeError,
+    DecodeOutcome,
+    best_effort_decode_vector,
+    earliest_decodable_prefix,
+)
 
 __all__ = [
     "GradientCode",
@@ -45,6 +51,26 @@ __all__ = [
 ]
 
 _REGISTRY: dict[str, type["GradientCode"]] = {}
+
+# Built-in family modules, registered on first lookup.  The approx package
+# sits ABOVE core in the layering, so core must never import it at package-
+# import time; deferring to first use keeps the dependency one-directional
+# at import and surfaces any approx import error at the lookup, not at
+# `import repro.core`.
+_FAMILY_MODULES = ("repro.core.schemes", "repro.approx.schemes")
+_families_loaded = False
+
+
+def _load_family_modules() -> None:
+    global _families_loaded
+    if _families_loaded:
+        return
+    for mod in _FAMILY_MODULES:
+        importlib.import_module(mod)
+    # flag only after success: a failed import must re-raise on the next
+    # lookup, not be masked as "unknown scheme" (retries are free — importlib
+    # caches successful module imports)
+    _families_loaded = True
 
 
 def register_scheme(name: str) -> Callable[[type], type]:
@@ -64,10 +90,12 @@ def register_scheme(name: str) -> Callable[[type], type]:
 
 def scheme_names() -> tuple[str, ...]:
     """Registered scheme names, sorted."""
+    _load_family_modules()
     return tuple(sorted(_REGISTRY))
 
 
 def scheme_class(name: str) -> type["GradientCode"]:
+    _load_family_modules()
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -104,6 +132,8 @@ class GradientCode(abc.ABC):
     structural_k: bool = False  # True: k is forced to m, requested k ignored
     supports_rebalance: bool = False  # True: B depends on c estimates
     wait_for_all: bool = False  # True: naive BSP, iteration waits for everyone
+    exact: bool = True  # True: any ≤s straggler pattern decodes exactly
+    reports_partial_work: bool = False  # True: workers stream per-partition results
 
     def __init__(
         self,
@@ -183,31 +213,55 @@ class GradientCode(abc.ABC):
     def _reset_decode_cache(self) -> None:
         self._solve = lru_cache(maxsize=self._decode_cache_size)(self._solve_uncached)
 
-    def _solve_uncached(self, avail_key: frozenset[int]) -> np.ndarray:
-        return solve_decode_vector(self.scheme.B, sorted(avail_key))
+    def _solve_uncached(self, avail_key: frozenset[int]) -> DecodeOutcome:
+        return best_effort_decode_vector(self.scheme.B, sorted(avail_key))
 
     def _decode_fast_path(self, avail: frozenset[int]) -> np.ndarray | None:
         """Scheme-specific O(m) decode shortcut; None -> generic solve."""
         return None
 
-    def decode_vector(self, available: Iterable[int]) -> np.ndarray:
-        """Decode vector ``a`` with ``supp(a) ⊆ available``, ``a·B = 1``."""
+    def decode_outcome(self, available: Iterable[int]) -> DecodeOutcome:
+        """Decode the available set, exactly when possible, best-effort
+        otherwise — never raises.  ``outcome.residual == 0`` iff an exact
+        decode exists for the set.  Outcomes (exact AND inexact) share one
+        LRU keyed by the available set; fast-path hits bypass it."""
         avail = frozenset(int(i) for i in available)
         fast = self._decode_fast_path(avail)
         if fast is not None:
-            return fast
+            return DecodeOutcome(a=fast, exact=True, residual=0.0)
         return self._solve(avail)
+
+    def decode_vector(self, available: Iterable[int]) -> np.ndarray:
+        """Decode vector ``a`` with ``supp(a) ⊆ available``, ``a·B = 1``.
+        Raises :class:`DecodeError` when only an inexact decode exists —
+        callers that can step inexactly use :meth:`decode_outcome`."""
+        outcome = self.decode_outcome(available)
+        if not outcome.exact:
+            raise DecodeError(
+                f"available set cannot decode exactly (rms residual {outcome.residual:.3g})"
+            )
+        return outcome.a
+
+    def decode_partial(
+        self, support: np.ndarray, available: Iterable[int] | None = None
+    ) -> DecodeOutcome:
+        """Best-effort decode from partially-completed workers.
+
+        ``support`` is the (m, k) completion mask — entry (w, j) is 1 when
+        worker w finished partition j (its effective B row is ``B[w]·mask``).
+        Continuous masks do not key an LRU, so these solves are uncached.
+        """
+        support = np.asarray(support, dtype=np.float64)
+        if support.shape != self.B.shape:
+            raise ValueError(f"support shape {support.shape} != B shape {self.B.shape}")
+        return best_effort_decode_vector(self.scheme.B, available, support=support)
 
     def decode_cache_info(self):
         """LRU stats of the generic solve path (hits/misses/currsize)."""
         return self._solve.cache_info()
 
     def is_decodable(self, available: Iterable[int]) -> bool:
-        try:
-            self.decode_vector(available)
-            return True
-        except DecodeError:
-            return False
+        return self.decode_outcome(available).exact
 
     def earliest_decodable(
         self, finish_times: Sequence[float], dead: Iterable[int] = ()

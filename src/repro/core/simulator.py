@@ -25,6 +25,7 @@ from repro.core.straggler import StragglerModel, StragglerProfile
 
 __all__ = [
     "IterationResult",
+    "PartitionTimes",
     "RunResult",
     "ClusterSim",
     "theoretical_optimal_time",
@@ -43,6 +44,54 @@ class IterationResult:
     used: tuple[int, ...]  # workers whose coded gradients entered the decode
     useful_compute: float  # Σ compute seconds that contributed to the decode
     busy_compute: float  # Σ compute seconds spent (incl. wasted straggler work)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionTimes:
+    """Per-partition result-arrival clocks for one iteration.
+
+    Workers compute their allocated partitions *sequentially* (allocation
+    order) and upload each result as it completes, so partial work observed
+    at a deadline τ has an honest clock: worker w's t-th partition arrives at
+    ``extra_delay + (t+1)/rate + comm`` — the last one at exactly the
+    whole-worker ``finish`` time the exact path uses (consistency is tested).
+
+    Attributes:
+      times: per worker, (n_w,) arrival time of each slot (empty if no load).
+      partitions: per worker, the partition ids in completion order.
+      finish: (m,) whole-worker finish times — identical to
+        :meth:`ClusterSim.iteration`'s ``finish``.
+      m, k: sizes.
+    """
+
+    times: tuple[np.ndarray, ...]
+    partitions: tuple[tuple[int, ...], ...]
+    finish: np.ndarray
+    m: int
+    k: int
+
+    def support_at(self, tau: float) -> np.ndarray:
+        """(m, k) effective-B completion mask: 1 where worker w's partition j
+        result has arrived by τ.  Feeds ``decode_partial``."""
+        sup = np.zeros((self.m, self.k), dtype=np.float64)
+        for w, (t, pids) in enumerate(zip(self.times, self.partitions)):
+            done = [j for j, tj in zip(pids, t) if tj <= tau]
+            sup[w, done] = 1.0
+        return sup
+
+    def work_done_at(self, tau: float) -> np.ndarray:
+        """(m,) partitions completed by τ per worker — the fractional-work
+        observation the throughput estimator folds in mid-iteration."""
+        return np.array(
+            [float(np.count_nonzero(t <= tau)) for t in self.times], dtype=np.float64
+        )
+
+    def event_times(self, deadline: float) -> np.ndarray:
+        """Sorted unique arrival times ≤ deadline — the only instants where
+        the decodable information set changes."""
+        all_t = np.concatenate([t for t in self.times if t.size] or [np.empty(0)])
+        finite = all_t[np.isfinite(all_t)]
+        return np.unique(finite[finite <= deadline])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +152,35 @@ class ClusterSim:
     def loads(self) -> np.ndarray:
         # recomputed per access: elastic rebalance moves load between workers
         return self.scheme.worker_load().astype(np.float64)
+
+    def partition_times(self, profile: StragglerProfile) -> PartitionTimes:
+        """Per-partition arrival clocks for one iteration — the honest-clock
+        view deadline policies consume (whole-worker ``iteration()`` times
+        are the last entries of each per-worker array)."""
+        scheme = self.scheme
+        loads = self.loads
+        rate = self.c / profile.slowdown  # inf slowdown -> rate 0
+        times: list[np.ndarray] = []
+        finish = np.empty(scheme.m, dtype=np.float64)
+        for w in range(scheme.m):
+            n_w = int(loads[w])
+            if n_w == 0:
+                times.append(np.empty(0, dtype=np.float64))
+                finish[w] = profile.extra_delay[w] + self.comm_time
+                continue
+            if rate[w] > 0:
+                t = profile.extra_delay[w] + np.arange(1, n_w + 1) / rate[w] + self.comm_time
+            else:
+                t = np.full(n_w, np.inf)
+            times.append(t)
+            finish[w] = t[-1]
+        return PartitionTimes(
+            times=tuple(times),
+            partitions=tuple(scheme.allocation.partitions),
+            finish=finish,
+            m=scheme.m,
+            k=scheme.k,
+        )
 
     def iteration(self, profile: StragglerProfile) -> IterationResult:
         loads = self.loads  # one worker_load() scan per iteration

@@ -47,15 +47,24 @@ class ThroughputEstimator:
     def update(self, step_times: np.ndarray, loads: np.ndarray) -> None:
         """Fold one iteration's observations in.
 
-        Args:
-          step_times: seconds each worker took (np.inf / nan for no report —
-            full stragglers are *not* folded into the estimate; transient
-            slowness is).
-          loads: partitions each worker computed this iteration (n_i).
+        Accepts both observation styles:
+
+        - **full finish times** — ``step_times[i]`` seconds worker i took to
+          report, ``loads[i]`` the (integer) partitions it computed;
+        - **fractional completion, observed mid-iteration** — the deadline
+          path steps before slow workers finish, so ``step_times`` may be a
+          scalar (the deadline every worker was observed at) and ``loads``
+          the *fractional* work completed by then (e.g. 2.0 of 5 partitions).
+
+        Either way the sample is work/time in partitions/sec.  Workers with
+        no signal — non-finite or non-positive time (full stragglers, inf
+        faults) or zero completed work — keep their previous estimate.
         """
-        step_times = np.asarray(step_times, dtype=np.float64)
+        step_times = np.broadcast_to(
+            np.asarray(step_times, dtype=np.float64), (self.m,)
+        )
         loads = np.asarray(loads, dtype=np.float64)
-        valid = np.isfinite(step_times) & (step_times > 0) & (loads > 0)
+        valid = np.isfinite(step_times) & (step_times > 0) & np.isfinite(loads) & (loads > 0)
         sample = np.where(valid, loads / np.maximum(step_times, 1e-12), self.c)
         self.c = (1 - self.alpha) * self.c + self.alpha * sample
 

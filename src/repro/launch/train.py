@@ -23,6 +23,7 @@ import time
 import jax
 import numpy as np
 
+from repro.approx import DEADLINE_MODES, DeadlinePolicy
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.configs import CodingConfig, TrainConfig, get_config
 from repro.core.registry import scheme_names
@@ -69,6 +70,16 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--straggler", default="none", choices=["none", "delay", "fault", "transient"])
     ap.add_argument("--delay", type=float, default=2.0)
+    ap.add_argument("--deadline-mode", default="none", choices=["none", *DEADLINE_MODES],
+                    help="inexact stepping: step at a deadline with whatever decoded "
+                         "(none = the paper's exact semantics)")
+    ap.add_argument("--target-residual", type=float, default=0.2,
+                    help="bounded_residual mode: step once the decode's RMS residual "
+                         "drops to this")
+    ap.add_argument("--deadline-slack", type=float, default=1.5,
+                    help="adaptive deadline = slack x EWMA-predicted exact iteration time")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="fixed deadline in (simulated) seconds; overrides adaptation")
     ap.add_argument("--speeds", default=None, help="comma-sep true worker speeds")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
@@ -88,10 +99,16 @@ def main(argv=None):
     )
     coding = CodingConfig(scheme=args.scheme, s=args.s)
     tc = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps, seed=args.seed)
+    policy = None
+    if args.deadline_mode != "none":
+        policy = DeadlinePolicy(
+            mode=args.deadline_mode, target_residual=args.target_residual,
+            slack=args.deadline_slack, deadline_s=args.deadline_s,
+        )
     trainer = CodedTrainer(
         model, coding, tc, m=args.m, part_mb=args.part_mb,
         straggler_model=straggler_from_args(args), true_speeds=speeds, rng=args.seed,
-        backend=args.backend,
+        backend=args.backend, deadline_policy=policy,
     )
     data = SyntheticData(cfg, k=trainer.k, part_mb=args.part_mb, seq_len=args.seq_len, seed=args.seed)
 
@@ -117,7 +134,8 @@ def main(argv=None):
             print(
                 f"step {step:5d} loss {metrics['loss']:.4f} gnorm {metrics['grad_norm']:.3f} "
                 f"sim_T {metrics['sim_iter_time']:.3f}s stragglers {metrics['n_stragglers']:.0f} "
-                f"used {metrics['n_used']:.0f}",
+                f"used {metrics['n_used']:.0f} residual {metrics['decode_residual']:.3f} "
+                f"exact_frac {metrics['exact_fraction']:.2f}",
                 flush=True,
             )
         if ckpt and (step + 1) % args.ckpt_every == 0:
@@ -128,6 +146,8 @@ def main(argv=None):
     print(json.dumps({
         "final_loss": metrics["loss"], "wall_s": time.time() - t0,
         "sim_time_total_s": sim_total, "scheme": args.scheme, "m": args.m,
+        "deadline_mode": args.deadline_mode,
+        "exact_fraction": metrics["exact_fraction"],
     }))
 
 

@@ -1,18 +1,22 @@
 """ElasticController: throughput estimation + simulated cluster clock +
-the elastic re-encode policy (DESIGN.md §4).
+the elastic re-encode policy (DESIGN.md §4), and — when a
+:class:`~repro.approx.DeadlinePolicy` is attached — the deadline-driven
+inexact stepping loop (DESIGN.md §5).
 
 Owns the pieces of the control loop that are about the CLUSTER rather than
 the model: the ClusterSim that turns straggler profiles into per-worker
 finish times (the paper's measured quantity), the EWMA ThroughputEstimator
 fed by those observations, and the hysteresis policy deciding when the
 codec should re-encode.  The trainer calls three methods per step:
-``tick`` (clock), ``observe`` (estimation), ``maybe_rebalance`` (policy).
+``tick`` / ``tick_deadline`` (clock), ``observe`` / ``observe_partial``
+(estimation), ``maybe_rebalance`` (policy).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.approx.deadline import DeadlinePolicy, DeadlineTick
 from repro.core.codec import Codec
 from repro.core.simulator import ClusterSim, IterationResult
 from repro.core.straggler import StragglerProfile
@@ -33,6 +37,8 @@ class ElasticController:
         (the paper's §V motivation) is reproducible.
       comm_time: per-worker result upload seconds (simulated).
       c_init: optional calibration prior for the estimator.
+      policy: optional deadline policy — attaching one enables the
+        deadline-driven inexact stepping loop (``tick_deadline``).
     """
 
     def __init__(
@@ -42,9 +48,11 @@ class ElasticController:
         true_speeds: np.ndarray | None = None,
         comm_time: float = 0.0,
         c_init: np.ndarray | None = None,
+        policy: DeadlinePolicy | None = None,
     ):
         m = codec.m
         self.codec = codec
+        self.policy = policy
         self.true_speeds = (
             np.asarray(true_speeds, np.float64) if true_speeds is not None else np.ones(m)
         )
@@ -60,10 +68,60 @@ class ElasticController:
         """Simulate one BSP iteration's clock for a straggler profile."""
         return self.sim.iteration(profile)
 
+    def tick_deadline(self, profile: StragglerProfile) -> DeadlineTick:
+        """Deadline-mode iteration: per-partition clocks, an EWMA-adapted
+        deadline, and the policy's (step time, decode outcome) choice."""
+        if self.policy is None:
+            raise RuntimeError("tick_deadline requires a DeadlinePolicy")
+        code = self.codec.code
+        ptimes = self.sim.partition_times(profile)
+        deadline = self.policy.deadline_for(code, self.estimator.c, self.sim.comm_time)
+        tau, outcome = self.policy.resolve(code, ptimes, deadline)
+        loads = code.worker_load().astype(np.float64)
+        finished = np.isfinite(ptimes.finish) & (ptimes.finish <= tau)
+        if code.reports_partial_work:
+            work = ptimes.work_done_at(float(tau))
+            # zero progress by τ is a right-censored sample, not "no signal":
+            # the worker provably could not sustain even 1/τ — without that
+            # bound a frozen overestimate would repeat the over-allocation
+            # (and the too-tight deadline) forever
+            censored = (loads > 0) & (work == 0)
+            work = np.where(censored, 1.0, work)
+        else:
+            # all-or-nothing reporting: mid-iteration progress is telemetry
+            # the scheme's contract says does not exist.  A finished worker
+            # reports its full load; a deadline-misser only the censored
+            # bound load/τ it provably failed to beat.
+            work = loads
+            censored = (loads > 0) & ~finished
+        return DeadlineTick(
+            T=float(tau), deadline=float(deadline), outcome=outcome,
+            ptimes=ptimes, work_done=work, censored=censored,
+        )
+
     def observe(self, finish_times: np.ndarray) -> None:
         """Fold observed per-worker finish times into the EWMA estimate
         (full stragglers — inf/nan — are not folded in)."""
         self.estimator.update(finish_times, self.codec.code.worker_load())
+
+    def observe_partial(self, tick: DeadlineTick) -> None:
+        """Fold a deadline iteration's completion observation in: worker i
+        did ``work_done[i]`` partitions in ``min(T, finish_i)`` seconds
+        (finishing early must not read as slowness).  Censored entries are
+        upper BOUNDS (c_i ≤ work/τ): informative only when they undercut the
+        current estimate, so they are capped at it — an overestimated worker
+        is pulled down toward the bound, a correctly-estimated one is left
+        alone.  Unlike the exact path's ``observe``, a worker dead *this*
+        iteration is indistinguishable from a slow one here, and the bound
+        is still true for it."""
+        finish = tick.ptimes.finish
+        elapsed = np.where(np.isfinite(finish) & (finish <= tick.T), finish, tick.T)
+        work = np.where(
+            tick.censored,
+            np.minimum(tick.work_done, self.estimator.c * elapsed),
+            tick.work_done,
+        )
+        self.estimator.update(elapsed, work)
 
     def maybe_rebalance(self, step: int, every: int) -> bool:
         """Elastic re-encode when due, supported, and drifted past the

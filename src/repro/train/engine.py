@@ -11,11 +11,14 @@ gradient backends (DESIGN.md §3).
                     encode, optional int8 wire compression, scaled-psum
                     decode.  For protocol benchmarks and compression runs.
 
-All backends consume the same inputs — partition-major host batch +
-decode vector from the :class:`~repro.core.codec.Codec` — and produce the
-same decoded mean gradient (property-tested across every registered
-scheme), so swapping the execution backend is a constructor argument, not
-a code change.
+All backends consume the same inputs — partition-major host batch + decode
+vector OR :class:`~repro.core.decoding.DecodeOutcome` from the
+:class:`~repro.core.codec.Codec` — and produce the same decoded gradient
+(property-tested across every registered scheme, exact and inexact), so
+swapping the execution backend is a constructor argument, not a code
+change.  An outcome's partial-work ``support`` mask zeroes unfinished
+partitions identically in every backend: fused/spmd via slot weights,
+reference via masked B rows.
 """
 
 from __future__ import annotations
@@ -32,8 +35,10 @@ from repro.core.aggregator import (
     faithful_spmd_step,
     protocol_reference,
     slot_weights,
+    support_slot_mask,
 )
 from repro.core.codec import Codec
+from repro.core.decoding import DecodeOutcome
 from repro.optim.adam import AdamWState, adamw_init, adamw_update, global_norm
 from repro.optim.schedules import cosine_warmup
 
@@ -109,7 +114,18 @@ class StepEngine:
         w = jnp.full((mb,), 1.0 / mb, jnp.float32)
         return self.model.weighted_loss(params, {**micro_batch, "weight": w})
 
-    def _flat_batch(self, partition_batch: dict[str, np.ndarray], a: np.ndarray) -> dict:
+    @staticmethod
+    def _split_decode(a) -> tuple[np.ndarray, np.ndarray | None]:
+        """Normalize a decode argument: bare vector or DecodeOutcome ->
+        (vector, partial-work support mask or None)."""
+        if isinstance(a, DecodeOutcome):
+            return a.a, a.support
+        return a, None
+
+    def _flat_batch(
+        self, partition_batch: dict[str, np.ndarray], a: np.ndarray,
+        support: np.ndarray | None = None,
+    ) -> dict:
         """Host-side pack: partition-major (k, mb, ...) -> flat coded batch
         (m·n_slots·mb, ...) with decode/encode folded into per-seq weights."""
         plan = self.codec.plan
@@ -120,7 +136,7 @@ class StepEngine:
             g = arr[idx]  # (m*n_slots, mb, ...)
             mb = arr.shape[1]
             out[key] = g.reshape((-1,) + arr.shape[2:])
-        w = slot_weights(plan, a)  # (m, n_slots), includes the 1/k
+        w = slot_weights(plan, a, support)  # (m, n_slots), includes the 1/k
         out["weight"] = (np.repeat(w.reshape(-1), mb) / mb).astype(np.float32)
         return out
 
@@ -166,22 +182,34 @@ class StepEngine:
 
     # -- gradients (backend seam, used directly by the equivalence tests) ---
 
-    def gradients(self, params: PyTree, partition_batch: dict, a: np.ndarray) -> PyTree:
-        """Decoded mean gradient under decode vector ``a`` via the engine's
-        backend.  All backends agree to float tolerance by construction."""
+    def gradients(self, params: PyTree, partition_batch: dict, a) -> PyTree:
+        """Decoded gradient under decode vector ``a`` (ndarray, or a
+        :class:`DecodeOutcome` carrying an optional partial-work mask) via
+        the engine's backend.  All backends agree to float tolerance by
+        construction — on exact AND inexact decodes."""
+        a, support = self._split_decode(a)
         if self.backend == "fused":
-            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self._flat_batch(partition_batch, a, support).items()
+            }
             _, grads = jax.value_and_grad(self.model.weighted_loss)(params, batch)
             return grads
         if self.backend == "reference":
             decoded, _ = protocol_reference(
-                self._slot_loss, params, partition_batch, self.codec.scheme, decode_vec=a
+                self._slot_loss, params, partition_batch, self.codec.scheme,
+                decode_vec=a, support=support,
             )
             return decoded
         # spmd: shard the slot batch over the coding axes and psum-decode
         plan = self.codec.plan
         sb = self.codec.pack(jax.tree.map(jnp.asarray, partition_batch))
-        coeff = jnp.asarray(plan.slot_coeff * plan.slot_mask)
+        coeff_np = plan.slot_coeff * plan.slot_mask
+        if support is not None:
+            # unfinished partitions never left the worker: mask their slots
+            # out of the wire-format coded gradient g̃_w
+            coeff_np = coeff_np * support_slot_mask(plan, support)
+        coeff = jnp.asarray(coeff_np)
         a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
         if self._err is None:
             self._err = jax.tree.map(
@@ -193,17 +221,26 @@ class StepEngine:
     # -- the train step -----------------------------------------------------
 
     def step(
-        self, state: TrainerState, partition_batch: dict[str, np.ndarray], a: np.ndarray
+        self, state: TrainerState, partition_batch: dict[str, np.ndarray], a
     ) -> tuple[TrainerState, dict[str, float]]:
-        """One optimizer step from a partition-major batch + decode vector."""
+        """One optimizer step from a partition-major batch + decode vector
+        (or :class:`DecodeOutcome` — inexact/partial steps use whatever
+        arrived, shapes unchanged, so the jitted path never recompiles)."""
+        a_vec, support = self._split_decode(a)
         if self.backend == "fused":
-            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self._flat_batch(partition_batch, a_vec, support).items()
+            }
             params, opt, metrics = self._fused_step(
                 state.params, state.opt, batch, jnp.asarray(state.step)
             )
         else:
             grads = self.gradients(state.params, partition_batch, a)
-            batch = {k: jnp.asarray(v) for k, v in self._flat_batch(partition_batch, a).items()}
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self._flat_batch(partition_batch, a_vec, support).items()
+            }
             loss = self._loss_fwd(state.params, batch)
             params, opt, metrics = self._apply(
                 state.params, state.opt, grads, jnp.asarray(state.step)

@@ -17,6 +17,12 @@ jitted fwd/bwd + AdamW; elastic re-encodes only ever change tensor
 *values*, never shapes) → fold observed times into the throughput estimate
 and re-encode when it drifts.
 
+With a ``deadline_policy`` (DESIGN.md §5) the step instead runs the
+inexact loop: per-partition clocks → policy picks (τ, DecodeOutcome) →
+the engine steps with whatever arrived (possibly best-effort/partial) →
+fractional-completion observations feed the estimator.  Step metrics gain
+``decode_residual`` / ``exact`` / ``exact_fraction`` in both modes.
+
 Timing: on this CPU container wall-clock heterogeneity cannot be measured,
 so the controller's ClusterSim models per-worker clocks from the same
 straggler profiles the numerics use; ``metrics["sim_iter_time"]`` is the
@@ -28,9 +34,9 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.approx.deadline import DeadlinePolicy
 from repro.configs.base import CodingConfig, TrainConfig
 from repro.core.codec import Codec
-from repro.core.decoding import DecodeError
 from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
 from repro.models.lm import LM
 from repro.train.elastic import ElasticController
@@ -62,6 +68,7 @@ class CodedTrainer:
         c_init: np.ndarray | None = None,
         rng: int = 0,
         backend: str = "fused",
+        deadline_policy: DeadlinePolicy | None = None,
     ):
         self.model = model
         self.coding = coding
@@ -69,6 +76,8 @@ class CodedTrainer:
         self.part_mb = part_mb
         self.straggler_model = straggler_model or NoStragglers()
         self._rng = np.random.default_rng(rng)
+        self._steps_taken = 0
+        self._exact_steps = 0
 
         self.codec = Codec.from_config(coding, m=m, c_init=c_init, rng=rng + 1)
         self.engine = StepEngine(
@@ -77,7 +86,8 @@ class CodedTrainer:
             compress=coding.compress,
         )
         self.elastic = ElasticController(
-            self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init
+            self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init,
+            policy=deadline_policy,
         )
 
     # convenience views (stable public surface; tests/examples rely on them)
@@ -94,12 +104,17 @@ class CodedTrainer:
         self.codec.rebalance(c)
         self.elastic.estimator.mark_applied()
 
+    def _exact_fraction(self) -> float:
+        return self._exact_steps / max(self._steps_taken, 1)
+
     def step(
         self, state: TrainerState, partition_batch: dict[str, np.ndarray],
         profile: StragglerProfile | None = None,
     ) -> tuple[TrainerState, dict[str, float]]:
         if profile is None:
             profile = self.straggler_model.sample(self.m, self._rng)
+        if self.elastic.policy is not None:
+            return self._step_deadline(state, partition_batch, profile)
 
         # --- timing model (what the paper measures) ---
         itres = self.elastic.tick(profile)
@@ -111,19 +126,22 @@ class CodedTrainer:
             # >s stragglers and no decodable set: BSP must wait for everyone
             # still alive (paper's naive fallback); dead workers excluded.
             available = [i for i in range(self.m) if np.isfinite(finish[i])]
-        try:
-            a = self.codec.decode_vector(available)
-        except DecodeError:
-            # cannot decode at all (e.g. naive + fault): skip the update;
+        self._steps_taken += 1
+        outcome = self.codec.decode_outcome(available)
+        if not outcome.exact:
+            # cannot decode exactly (e.g. naive + fault): skip the update;
             # full metric key set so consumers can log unconditionally
             return state, {
                 "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
                 "skipped": 1.0, "sim_iter_time": float("inf"),
                 "n_stragglers": float(len(profile.straggler_set())),
                 "n_used": 0.0,
+                "decode_residual": outcome.residual, "exact": 0.0,
+                "exact_fraction": self._exact_fraction(),
             }
+        self._exact_steps += 1
 
-        new_state, metrics = self.engine.step(state, partition_batch, a)
+        new_state, metrics = self.engine.step(state, partition_batch, outcome.a)
 
         # --- throughput estimation + elastic re-encode ---
         self.elastic.observe(finish)
@@ -134,6 +152,51 @@ class CodedTrainer:
             "n_stragglers": float(len(profile.straggler_set())),
             "n_used": float(len(available)),
             "skipped": 0.0,
+            "decode_residual": 0.0, "exact": 1.0,
+            "exact_fraction": self._exact_fraction(),
+        }
+        if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
+            out["rebalanced"] = 1.0
+        return new_state, out
+
+    def _step_deadline(
+        self, state: TrainerState, partition_batch: dict[str, np.ndarray],
+        profile: StragglerProfile,
+    ) -> tuple[TrainerState, dict[str, float]]:
+        """Deadline-driven inexact step (DESIGN.md §5): always steps, with
+        whatever decodes by the policy's chosen instant."""
+        tick = self.elastic.tick_deadline(profile)
+        outcome = tick.outcome
+        self._steps_taken += 1
+        self._exact_steps += int(outcome.exact)
+        if outcome.n_used == 0:
+            # nothing decodable arrived by the deadline: an optimizer step on
+            # the all-zero gradient would still weight-decay the params and
+            # advance the LR schedule — skip, like the exact path's skip, but
+            # the clock is paid and any observations still count
+            self.elastic.observe_partial(tick)
+            return state, {
+                "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
+                "skipped": 1.0, "sim_iter_time": tick.T, "deadline": tick.deadline,
+                "n_stragglers": float(len(profile.straggler_set())),
+                "n_used": 0.0,
+                "decode_residual": outcome.residual, "exact": 0.0,
+                "exact_fraction": self._exact_fraction(),
+            }
+
+        new_state, metrics = self.engine.step(state, partition_batch, outcome)
+
+        self.elastic.observe_partial(tick)
+        out = {
+            **metrics,
+            "sim_iter_time": tick.T,
+            "deadline": tick.deadline,
+            "n_stragglers": float(len(profile.straggler_set())),
+            "n_used": float(outcome.n_used),
+            "skipped": 0.0,
+            "decode_residual": outcome.residual,
+            "exact": float(outcome.exact),
+            "exact_fraction": self._exact_fraction(),
         }
         if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
             out["rebalanced"] = 1.0

@@ -1,0 +1,487 @@
+"""Approx subsystem (DESIGN.md §5): the DecodeOutcome contract, the two
+approximate code families, per-partition simulator clocks, deadline
+policies, fractional throughput estimation, and the tentpole acceptance —
+fused/reference backend equivalence on INEXACT steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro.approx import DeadlinePolicy
+from repro.configs.base import TrainConfig
+from repro.core import (
+    ClusterSim,
+    Codec,
+    DecodeOutcome,
+    ThroughputEstimator,
+    best_effort_decode_vector,
+    get_scheme,
+)
+from repro.core.straggler import StragglerProfile
+from repro.train.engine import StepEngine
+
+_C4 = [1.0, 2.0, 3.0, 2.0]
+
+
+def _het(name="heter_aware", m=4, k=8, s=1, seed=0):
+    return get_scheme(name, m=m, k=k, s=s, c=_C4[:m], rng=seed)
+
+
+def _profile(m, slow=(), dead=(), delay=0.0):
+    slowdown = np.ones(m)
+    extra = np.zeros(m)
+    for i in slow:
+        extra[i] = delay
+    for i in dead:
+        slowdown[i] = np.inf
+    return StragglerProfile(slowdown, extra)
+
+
+# ---------------------------------------------------------------------------
+# DecodeOutcome contract: residual 0  <=>  exact decodable set
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_residual_zero_iff_exact_decodable(seed):
+    """For every sampled availability pattern: outcome.residual == 0 exactly
+    when an exact decodable set exists (the s-tolerance guarantee for ≤s
+    stragglers, and only a best-effort fit beyond it)."""
+    rng = np.random.default_rng(seed)
+    code = _het(seed=seed % 7)
+    n_drop = int(rng.integers(0, code.m))
+    dead = rng.choice(code.m, size=n_drop, replace=False).tolist()
+    avail = [i for i in range(code.m) if i not in dead]
+    outcome = code.decode_outcome(avail)
+    assert isinstance(outcome, DecodeOutcome)
+    assert (outcome.residual == 0.0) == outcome.exact
+    if n_drop <= code.s and avail:
+        assert outcome.exact  # within designed tolerance: always exact
+        assert np.allclose(outcome.a @ code.B, 1.0, atol=1e-6)
+    if not outcome.exact:
+        assert outcome.residual > 0
+        # best-effort is still the least-squares optimum over those rows:
+        # no exact combination exists, and a is supported on avail only
+        assert all(outcome.a[i] == 0 for i in dead)
+
+
+def test_best_effort_empty_set_is_unit_residual():
+    code = _het()
+    out = code.decode_outcome([])
+    assert not out.exact and out.residual == pytest.approx(1.0)
+    assert np.all(out.a == 0)
+
+
+def test_best_effort_support_mask_restricts_rows():
+    """A support mask zeroing one worker's row is equivalent to dropping the
+    worker from the available set."""
+    code = _het()
+    sup = np.ones((code.m, code.k))
+    sup[1] = 0.0
+    via_mask = best_effort_decode_vector(code.B, support=sup)
+    via_avail = best_effort_decode_vector(code.B, available=[0, 2, 3])
+    assert via_mask.exact == via_avail.exact
+    assert via_mask.residual == pytest.approx(via_avail.residual, abs=1e-9)
+    np.testing.assert_allclose(via_mask.a, via_avail.a, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# decode LRU under inexact outcomes + rebalance invalidation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_cache_caches_inexact_outcomes():
+    """Undecodable patterns used to raise (and lru_cache never caches
+    raises); outcomes make them first-class cached entries."""
+    code = _het()
+    avail = [0]  # 1 worker cannot span 1_{1xk}
+    o1 = code.decode_outcome(avail)
+    assert not o1.exact and o1.residual > 0
+    before = code.decode_cache_info()
+    o2 = code.decode_outcome(avail)
+    after = code.decode_cache_info()
+    assert after.hits == before.hits + 1
+    assert o2 is o1  # same cached object
+
+
+def test_rebalance_invalidates_approximate_cache_entries():
+    """An inexact outcome cached for the old B must not survive rebalance:
+    the residual is recomputed against the NEW matrix."""
+    code = _het()
+    avail = [0, 1]
+    stale = code.decode_outcome(avail)
+    assert not stale.exact
+    code.rebalance([1.0, 1.0, 6.0, 6.0])
+    fresh = code.decode_outcome(avail)
+    assert code.decode_cache_info().currsize == 1  # cache was dropped
+    assert fresh is not stale
+    # the fresh best-effort fit is measured against the new B
+    fit = fresh.a @ code.B
+    assert fresh.residual == pytest.approx(
+        float(np.linalg.norm(fit - 1.0) / np.sqrt(code.k)) if not fresh.exact else 0.0,
+        abs=1e-9,
+    )
+
+
+# ---------------------------------------------------------------------------
+# bernoulli scheme
+# ---------------------------------------------------------------------------
+
+
+def test_bernoulli_registry_construction():
+    code = _het("bernoulli")
+    assert not type(code).exact and type(code).supports_rebalance
+    assert code.scheme.s == 0  # guaranteed tolerance is 0 (approximate)
+    # every partition covered, coefficients sum each column to 1
+    np.testing.assert_allclose(code.B.sum(axis=0), 1.0, atol=1e-12)
+    out = code.decode_outcome(range(code.m))
+    assert out.exact  # full availability always decodes (a = 1 works)
+
+
+def test_bernoulli_deterministic_and_capped():
+    a = get_scheme("bernoulli", m=4, k=8, s=1, c=_C4, rng=3)
+    b = get_scheme("bernoulli", m=4, k=8, s=1, c=_C4, rng=3)
+    np.testing.assert_array_equal(a.B, b.B)
+    capped = get_scheme("bernoulli", m=4, k=8, s=2, c=[1, 1, 1, 10], rng=0, max_load=3)
+    assert max(capped.allocation.counts) <= 3
+    capped.rebalance([10, 1, 1, 1])
+    assert max(capped.allocation.counts) <= 3
+
+
+def test_bernoulli_codec_shape_stable_rebalance():
+    codec = Codec(get_scheme("bernoulli", m=4, k=8, s=1, c=_C4, rng=0))
+    shape = codec.plan.slot_pids.shape
+    codec.rebalance([5.0, 1.0, 1.0, 1.0])
+    assert codec.plan.slot_pids.shape == shape
+    assert max(codec.code.allocation.counts) <= codec.n_slots
+
+
+# ---------------------------------------------------------------------------
+# partial_work scheme + per-partition simulator clocks
+# ---------------------------------------------------------------------------
+
+
+def test_partition_times_consistent_with_iteration():
+    code = _het("partial_work")
+    sim = ClusterSim(code, np.asarray(_C4), comm_time=0.01)
+    prof = _profile(4, dead=[2])
+    pt = sim.partition_times(prof)
+    it = sim.iteration(prof)
+    np.testing.assert_allclose(pt.finish, it.finish)
+    # per-worker arrival times are sorted and end at the worker finish
+    for w, t in enumerate(pt.times):
+        if t.size and np.isfinite(pt.finish[w]):
+            assert np.all(np.diff(t) >= 0)
+            assert t[-1] == pytest.approx(pt.finish[w])
+    # support grows monotonically with tau and hits the full allocation
+    s_early = pt.support_at(0.0)
+    s_late = pt.support_at(1e9)
+    assert np.all(s_late >= s_early)
+    assert s_late.sum() == sum(len(p) for w, p in enumerate(pt.partitions) if np.isfinite(pt.finish[w]))
+    # work_done_at counts completed partitions
+    assert np.all(pt.work_done_at(1e9)[np.isfinite(pt.finish)] > 0)
+    assert pt.work_done_at(1e9)[2] == 0  # dead worker never completes
+
+
+def test_partial_decode_prefix_beats_whole_worker_decode():
+    """The point of partial_work: at a mid-iteration instant the completed
+    PREFIXES can carry strictly more information than the set of fully
+    finished workers."""
+    code = _het("partial_work")
+    sim = ClusterSim(code, np.asarray(_C4), comm_time=0.0)
+    prof = _profile(4)
+    pt = sim.partition_times(prof)
+    finite = pt.finish[np.isfinite(pt.finish)]
+    tau = float(np.sort(finite)[0]) * 0.999  # just before the first finisher
+    partial = code.decode_partial(pt.support_at(tau))
+    whole = code.decode_outcome(
+        [w for w in range(4) if pt.finish[w] <= tau and len(pt.partitions[w])]
+    )
+    assert partial.residual <= whole.residual + 1e-12
+    assert whole.residual == pytest.approx(1.0)  # nobody fully finished yet
+
+
+# ---------------------------------------------------------------------------
+# deadline policies
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_modes_order_and_outcomes():
+    """exact_first waits for exactness within the deadline; bounded_residual
+    never steps later than exact_first; fixed_deadline always steps at the
+    deadline."""
+    code = _het("partial_work")
+    sim = ClusterSim(code, np.asarray(_C4), comm_time=0.01)
+    prof = _profile(4, slow=[0], delay=5.0)
+    pt = sim.partition_times(prof)
+    c_est = np.asarray(_C4)
+
+    exact_first = DeadlinePolicy(mode="exact_first", slack=50.0)
+    dl = exact_first.deadline_for(code, c_est, 0.01)
+    t_exact, o_exact = exact_first.resolve(code, pt, dl)
+    assert o_exact.exact
+
+    bounded = DeadlinePolicy(mode="bounded_residual", target_residual=0.5, slack=50.0)
+    t_bound, o_bound = bounded.resolve(code, pt, dl)
+    assert t_bound <= t_exact
+    assert o_bound.exact or o_bound.residual <= 0.5
+
+    fixed = DeadlinePolicy(mode="fixed_deadline", deadline_s=0.5)
+    t_fix, _ = fixed.resolve(code, pt, fixed.deadline_for(code, c_est, 0.01))
+    assert t_fix == pytest.approx(0.5)
+
+
+def test_deadline_adapts_from_estimates():
+    """The adaptive deadline tracks the EWMA estimates: believing the
+    cluster is 2x faster halves the deadline."""
+    code = _het("partial_work")
+    pol = DeadlinePolicy(mode="bounded_residual", slack=1.5)
+    d1 = pol.deadline_for(code, np.asarray(_C4))
+    d2 = pol.deadline_for(code, 2.0 * np.asarray(_C4))
+    assert d2 == pytest.approx(d1 / 2.0)
+    pinned = DeadlinePolicy(mode="fixed_deadline", deadline_s=3.0)
+    assert pinned.deadline_for(code, np.asarray(_C4)) == 3.0
+
+
+def test_deadline_policy_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown deadline mode"):
+        DeadlinePolicy(mode="whenever")
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_bounded_residual_steps_at_first_qualifying_event(seed):
+    """The residual is NOT monotone in t (a completing partition can raise
+    the lstsq misfit), so bounded_residual must scan forward: it steps at
+    the earliest sampled event meeting the bound, and only falls to the
+    deadline when NO sampled event qualifies — even if a later event
+    regresses past the target."""
+    rng = np.random.default_rng(seed)
+    code = _het("partial_work", seed=seed % 7)
+    sim = ClusterSim(code, np.asarray(_C4) * rng.uniform(0.5, 2.0, size=4), comm_time=0.01)
+    prof = StragglerProfile(np.ones(4), rng.uniform(0.0, 3.0, size=4))
+    pt = sim.partition_times(prof)
+    pol = DeadlinePolicy(mode="bounded_residual", target_residual=0.3, slack=2.0)
+    deadline = pol.deadline_for(code, np.asarray(_C4), 0.01)
+    tau, out = pol.resolve(code, pt, deadline)
+
+    def qualifies(t):
+        o = pol._outcome_at(code, pt, float(t))
+        return o.exact or o.residual <= pol.target_residual
+
+    events = pt.event_times(deadline)
+    if events.size > pol.max_events:
+        idx = np.unique(np.linspace(0, events.size - 1, pol.max_events).round().astype(int))
+        events = events[idx]
+    if out.exact or out.residual <= pol.target_residual:
+        assert not any(qualifies(t) for t in events if t < tau - 1e-12)
+    else:
+        # fell to the deadline: no sampled event may have qualified
+        assert tau == pytest.approx(deadline)
+        assert not any(qualifies(t) for t in events)
+
+
+# ---------------------------------------------------------------------------
+# fractional throughput estimation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_accepts_fractional_midstep_samples():
+    est = ThroughputEstimator(3, alpha=0.5)
+    # observed at a scalar deadline of 2s: 1.0, 3.0 partitions done; worker 2
+    # reported nothing (fault) -> keeps prior
+    for _ in range(10):
+        est.update(2.0, np.array([1.0, 3.0, 0.0]))
+    assert est.c[0] == pytest.approx(0.5, rel=0.05)
+    assert est.c[1] == pytest.approx(1.5, rel=0.05)
+    assert est.c[2] == pytest.approx(1.0)  # untouched prior
+    est.update(np.array([np.inf, 2.0, np.nan]), np.array([1.0, np.nan, 1.0]))
+    assert np.isfinite(est.c).all()
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: backends agree on inexact steps
+# ---------------------------------------------------------------------------
+
+
+class _ToyModel:
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32),
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+def _partition_batch(k, mb=3, d=4, seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "x": r.normal(size=(k, mb, d)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+@pytest.mark.parametrize("name", ["partial_work", "bernoulli"])
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_backends_equal_on_inexact_steps(name, seed):
+    """Property (acceptance): for random partial-completion masks, the fused
+    and reference backends produce the same gradients from the same
+    DecodeOutcome — exactness is NOT assumed anywhere in the backends."""
+    rng = np.random.default_rng(seed)
+    model = _ToyModel()
+    codec = Codec(get_scheme(name, m=4, k=8, s=1, c=_C4, rng=seed % 5))
+    support = (rng.uniform(size=(codec.m, codec.k)) < 0.6).astype(np.float64)
+    outcome = codec.decode_partial(support)
+    params = model.init(jax.random.PRNGKey(seed % 17))
+    pb = _partition_batch(codec.k, seed=seed % 13)
+    tc = TrainConfig()
+    g_fused = StepEngine(model, tc, codec, backend="fused").gradients(params, pb, outcome)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, outcome)
+    for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=3e-5, rtol=3e-4)
+
+
+def test_engine_full_step_with_inexact_outcome():
+    """A full optimizer step from a best-effort outcome: runs, steps, and
+    fused == reference parameters."""
+    model = _ToyModel()
+    tc = TrainConfig(lr=1e-2, warmup_steps=1, total_steps=4)
+    outs, states = [], []
+    for backend in ("fused", "reference"):
+        codec = Codec(get_scheme("partial_work", m=4, k=8, s=1, c=_C4, rng=0))
+        sup = np.ones((4, 8))
+        sup[0] = 0.0
+        sup[1, :4] = 0.0
+        outcome = codec.decode_partial(sup)
+        assert not outcome.exact
+        eng = StepEngine(model, tc, codec, backend=backend)
+        state = eng.init_state(jax.random.PRNGKey(1))
+        state, metrics = eng.step(state, _partition_batch(8), outcome)
+        assert state.step == 1 and np.isfinite(metrics["loss"])
+        outs.append(metrics)
+        states.append(state)
+    assert outs[0]["loss"] == pytest.approx(outs[1]["loss"], rel=1e-5)
+    for x, y in zip(jax.tree.leaves(states[0].params), jax.tree.leaves(states[1].params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deadline observation contract
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_observation_respects_reporting_contract():
+    """partial_work schemes are observed at partition granularity;
+    all-or-nothing schemes only as whole workers.  Either way a
+    deadline-misser carries a right-censored sample (the bound it provably
+    could not beat) so overestimated workers cannot freeze forever."""
+    from repro.train.elastic import ElasticController
+
+    prof = _profile(4, slow=[0], delay=100.0)
+    for name in ("partial_work", "bernoulli"):
+        codec = Codec(get_scheme(name, m=4, k=8, s=1, c=_C4, rng=0))
+        ctrl = ElasticController(
+            codec, true_speeds=np.asarray(_C4), comm_time=0.01,
+            policy=DeadlinePolicy(mode="fixed_deadline", deadline_s=4.0),
+        )
+        tick = ctrl.tick_deadline(prof)
+        loads = codec.code.worker_load().astype(float)
+        raw = tick.ptimes.work_done_at(tick.T)
+        assert raw[0] == 0.0  # the delayed worker really reported nothing
+        assert tick.censored[0] and not tick.censored[1:].any()
+        if codec.code.reports_partial_work:
+            # observed counts, except zero-progress censored to the 1/τ bound
+            np.testing.assert_array_equal(
+                tick.work_done, np.where(tick.censored, 1.0, raw)
+            )
+        else:
+            # whole-worker observations: finishers report their full load,
+            # the misser carries the censored load/τ bound
+            np.testing.assert_array_equal(tick.work_done, loads)
+        # a censored bound BELOW the prior corrects the overestimate...
+        c_before = ctrl.estimator.c.copy()
+        ctrl.observe_partial(tick)
+        assert ctrl.estimator.c[0] < c_before[0]
+        # ...and one above the prior must not raise it
+        ctrl.estimator.c[:] = 1e-3
+        before = ctrl.estimator.c.copy()
+        ctrl.observe_partial(tick)
+        assert ctrl.estimator.c[0] <= before[0] + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# trainer-level deadline loop
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_deadline_skips_on_empty_outcome():
+    """A deadline shorter than any arrival must NOT apply the optimizer (a
+    zero-gradient AdamW step still weight-decays params and advances the
+    schedule) — it reports a skipped step with the clock paid."""
+    from repro.configs import CodingConfig, get_config
+    from repro.models.lm import build_model
+    from repro.train.trainer import CodedTrainer
+
+    cfg = get_config("smollm-360m").reduced()
+    tr = CodedTrainer(
+        build_model(cfg), CodingConfig(scheme="partial_work", s=1),
+        TrainConfig(lr=1e-3, warmup_steps=3, total_steps=8),
+        m=4, part_mb=2, comm_time=0.5, true_speeds=np.ones(4),
+        deadline_policy=DeadlinePolicy(mode="fixed_deadline", deadline_s=0.01),
+    )
+    from repro.data.pipeline import SyntheticData
+
+    data = SyntheticData(cfg, k=tr.k, part_mb=2, seq_len=32)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    params_before = jax.tree.leaves(state.params)
+    state, metrics = tr.step(state, data.batch(0))
+    assert metrics["skipped"] == 1.0 and metrics["n_used"] == 0.0
+    assert state.step == 0  # optimizer untouched
+    for a, b in zip(params_before, jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_deadline_mode_steps_and_logs():
+    from repro.configs import CodingConfig, get_config
+    from repro.core.straggler import FixedDelayStragglers
+    from repro.models.lm import build_model
+    from repro.train.trainer import CodedTrainer
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    tr = CodedTrainer(
+        model, CodingConfig(scheme="partial_work", s=1),
+        TrainConfig(lr=1e-3, warmup_steps=3, total_steps=12),
+        m=4, part_mb=2,
+        straggler_model=FixedDelayStragglers(s=1, delay=np.inf),
+        true_speeds=np.array([1.0, 2.0, 3.0, 4.0]),
+        deadline_policy=DeadlinePolicy(mode="bounded_residual", target_residual=0.3),
+    )
+    from repro.data.pipeline import SyntheticData
+
+    data = SyntheticData(cfg, k=tr.k, part_mb=2, seq_len=32)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    losses = []
+    for step in range(8):
+        state, metrics = tr.step(state, data.batch(step))
+        losses.append(metrics["loss"])
+        assert metrics["skipped"] == 0.0  # deadline mode always steps
+        assert np.isfinite(metrics["sim_iter_time"])
+        assert metrics["decode_residual"] <= 0.3 or metrics["exact"] == 1.0
+        assert 0.0 <= metrics["exact_fraction"] <= 1.0
+        assert "deadline" in metrics
+    assert losses[-1] < losses[0]

@@ -36,7 +36,9 @@ def _build(name: str, m: int = 4, seed: int = 0) -> GradientCode:
 
 @pytest.mark.parametrize("name", ALL_SCHEMES)
 def test_registry_roundtrip(name):
-    """Every registered scheme constructs, declares its k, and decodes."""
+    """Every registered scheme constructs, declares its k, and decodes.
+    Inexact schemes (bernoulli) store their *guaranteed* tolerance in
+    scheme.s (0), so Condition 1 degenerates to full-set decodability."""
     code = _build(name)
     cls = scheme_class(name)
     assert isinstance(code, cls) and cls.name == name
@@ -205,22 +207,31 @@ def _partition_batch(k, mb=3, d=4, seed=0):
 @pytest.mark.parametrize("name", ALL_SCHEMES)
 def test_fused_matches_protocol_reference_all_schemes(name):
     """Acceptance: fused-backend gradients == paper-protocol oracle for every
-    registered scheme under a sampled straggler pattern."""
+    registered scheme under a sampled straggler pattern.  Inexact schemes
+    may yield a best-effort decode for the pattern — the backends must still
+    agree with each other; only exact outcomes must match the true mean
+    gradient."""
     model = _ToyModel()
     s = 0 if name == "naive" else 1
     codec = Codec(get_scheme(name, m=4, k=8, s=s, c=_C4, rng=0))
     rng = np.random.default_rng(hash(name) % 2**32)
     dead = [] if s == 0 else sorted(rng.choice(codec.m, size=s, replace=False).tolist())
     avail = [i for i in range(codec.m) if i not in dead]
-    a = codec.decode_vector(avail)
+    outcome = codec.decode_outcome(avail)
+    assert outcome.exact or not scheme_class(name).exact
 
     params = model.init(jax.random.PRNGKey(0))
     pb = _partition_batch(codec.k)
     tc = TrainConfig()
-    g_fused = StepEngine(model, tc, codec, backend="fused").gradients(params, pb, a)
-    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    g_fused = StepEngine(model, tc, codec, backend="fused").gradients(params, pb, outcome)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, outcome)
 
-    # both must equal the true mean gradient over all k partitions
+    for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=2e-5, rtol=2e-4)
+
+    if not outcome.exact:
+        return
+    # exact decodes must equal the true mean gradient over all k partitions
     truth = jax.tree.map(jnp.zeros_like, params)
     for j in range(codec.k):
         mb = pb["x"].shape[1]
@@ -231,9 +242,6 @@ def test_fused_matches_protocol_reference_all_schemes(name):
         }
         g = jax.grad(model.weighted_loss)(params, batch_j)
         truth = jax.tree.map(lambda acc, x: acc + x / codec.k, truth, g)
-
-    for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
-        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=2e-5, rtol=2e-4)
     for ga, gb in zip(jax.tree.leaves(g_fused), jax.tree.leaves(truth)):
         np.testing.assert_allclose(np.asarray(ga), np.asarray(gb), atol=2e-5, rtol=2e-4)
 

@@ -30,5 +30,9 @@ def test_engine_spmd_backend_matches_reference():
     _run("engine_spmd")
 
 
+def test_engine_spmd_backend_matches_reference_inexact():
+    _run("engine_spmd_inexact")
+
+
 def test_dryrun_lowering_small_mesh():
     _run("dryrun_small")
