@@ -21,7 +21,7 @@ def _fast() -> bool:
 
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
-    from benchmarks import fig6_approx, kernels_bench, roofline_table
+    from benchmarks import fig6_approx, kernels_bench, roofline_table, steptime
 
     t0 = time.time()
     all_rows = []
@@ -74,6 +74,14 @@ def main() -> None:
     claims = fig6_approx.derived_claims(rows)
     all_rows += rows
     summary.append(("fig6_approx", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
+    # --- step-time: device-resident vs host data path (DESIGN.md §6) ---
+    t = time.time()
+    rows = steptime.run(n_iters=8 if _fast() else 24)
+    claims = steptime.derived_claims(rows)
+    all_rows += rows
+    summary.append(("steptime", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- kernels ---

@@ -17,10 +17,21 @@ Three implementations of the same math, used at different layers:
    agreement with (1) is property-tested.)
 
 3. ``faithful_spmd_step`` — the protocol under ``jax.shard_map``: manual over
-   the coding axes, auto over 'model' (TP).  Materializes g̃_w per worker,
-   optionally compresses it (int8 + error feedback) exactly where the wire
-   format would apply, then decodes with a scaled psum.  Used for protocol
-   benchmarks and as the compression-enabled path.
+   the coding axes, auto over 'model' (TP).  Each worker flattens its
+   per-slot gradients into one (D,) buffer (``ravel_pytree``), encodes them
+   in a single pass through the roofline-optimal ``coded_reduce`` Pallas
+   kernel (``interpret=True`` off-TPU), optionally compresses the flat wire
+   tensor (int8 + error feedback) exactly where the wire format would apply,
+   then decodes with ONE scaled psum over the flat buffer — not a per-leaf
+   tree walk.  The master-side unravel back to the param pytree happens once,
+   outside the collective.  Used for protocol benchmarks and as the
+   compression-enabled path.
+
+The device-resident data-path contract (DESIGN.md §6) lives here too:
+``slot_weights_device`` / ``pack_flat_device`` are the in-jit twins of the
+host ``slot_weights`` / ``_flat_batch`` pack, consuming the small per-step
+device inputs (decode vector ``a`` (m,), ``support`` (m,k)) plus the
+plan tensors that the engine keeps device-resident between rebalances.
 
 Deployment note (see DESIGN.md §3): within one SPMD program all chips step in
 lock-step, so the (s+1)× compute redundancy buys gradient *exactness when
@@ -40,16 +51,21 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.core.coding import CodingScheme
 from repro.core.decoding import Decoder
+from repro.kernels.coded_reduce import coded_reduce_pallas
 
 __all__ = [
     "CodedPlan",
     "make_plan",
     "slot_weights",
+    "slot_weights_device",
     "support_slot_mask",
+    "support_slot_mask_device",
     "pack_coded_batch",
+    "pack_flat_device",
     "protocol_reference",
     "fused_coded_value_and_grad",
     "faithful_spmd_step",
@@ -149,16 +165,83 @@ def uniform_weights(plan: CodedPlan) -> np.ndarray:
     return (plan.slot_mask / plan.k).astype(np.float32)
 
 
-def pack_coded_batch(partition_batch: PyTree, plan: CodedPlan) -> PyTree:
+# ---------------------------------------------------------------------------
+# device-resident twins of the host pack/weights (run INSIDE the jitted step)
+# ---------------------------------------------------------------------------
+
+
+def support_slot_mask_device(
+    support: jnp.ndarray, slot_pids: jnp.ndarray, slot_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """In-jit :func:`support_slot_mask`: gather the (m, k) completion mask
+    into slot space, re-masked by ``slot_mask`` because padding slots gather
+    pid 0 — the device-side home of the padding invariant (used by the fused
+    weights AND the spmd wire coefficients)."""
+    done = jnp.take_along_axis(support.astype(jnp.float32), slot_pids, axis=1)
+    return done * slot_mask
+
+
+def slot_weights_device(
+    a: jnp.ndarray,
+    support: jnp.ndarray,
+    slot_coeff: jnp.ndarray,
+    slot_mask: jnp.ndarray,
+    slot_pids: jnp.ndarray,
+    k: int,
+) -> jnp.ndarray:
+    """In-jit :func:`slot_weights`: W[w,s] = a_w·B[w,pid]·done[w,pid]/k.
+
+    ``a`` (m,) and ``support`` (m, k) are the only per-step device inputs;
+    ``slot_coeff`` / ``slot_mask`` / ``slot_pids`` are the plan tensors the
+    engine keeps device-resident between rebalances.  Callers without
+    partial work pass an all-ones ``support`` — `done·mask == mask` then,
+    so the exact path is bit-identical to the host formula.
+    """
+    done = support_slot_mask_device(support, slot_pids, slot_mask)
+    w = a.astype(jnp.float32)[:, None] * slot_coeff * done / k
+    return w.astype(jnp.float32)
+
+
+def pack_flat_device(
+    partition_batch: dict, slot_pids: jnp.ndarray, weights: jnp.ndarray
+) -> dict:
+    """In-jit slot pack: partition-major leaves (k, mb, ...) -> the fused
+    flat coded batch (m·n_slots·mb, ...) with per-sequence loss weights.
+
+    The (s+1)×-replicated coded working set is materialized HERE, on device,
+    by an XLA gather — the host only ever ships the k·mb unique sequences
+    (DESIGN.md §6).  ``weights`` is the (m, n_slots) output of
+    :func:`slot_weights_device`.
+    """
+    idx = slot_pids.reshape(-1)  # (m*n_slots,)
+    out = {}
+    mb = None
+    for key, x in partition_batch.items():
+        # gather on a 2-D (k, mb·rest) view — XLA lowers row gathers of flat
+        # rows to straight memcpys, several× faster than an N-D take
+        g = jnp.take(x.reshape((x.shape[0], -1)), idx, axis=0)
+        mb = x.shape[1]
+        out[key] = g.reshape((-1,) + x.shape[2:])
+    out["weight"] = (jnp.repeat(weights.reshape(-1), mb) / mb).astype(jnp.float32)
+    return out
+
+
+def pack_coded_batch(
+    partition_batch: PyTree, plan: CodedPlan, idx: jnp.ndarray | None = None
+) -> PyTree:
     """Gather partition-major data (k, mb, ...) into slot-major (m, n_max, mb, ...).
 
     Replication factor is s+1 by construction — this materializes the coded
-    working set, which is inherent to gradient coding.
+    working set, which is inherent to gradient coding.  Pass ``idx`` (the
+    flattened (m·n_max,) slot_pids as a device array) to reuse a cached
+    device copy instead of re-uploading the plan's; the gather runs on a
+    2-D (k, mb·rest) view, which XLA lowers to straight row memcpys.
     """
-    idx = jnp.asarray(plan.slot_pids.reshape(-1))  # (m*n_max,)
+    if idx is None:
+        idx = jnp.asarray(plan.slot_pids.reshape(-1))  # (m*n_max,)
 
     def gather(x):
-        out = jnp.take(x, idx, axis=0)
+        out = jnp.take(x.reshape((x.shape[0], -1)), idx, axis=0)
         return out.reshape((plan.m, plan.n_max) + x.shape[1:])
 
     return jax.tree.map(gather, partition_batch)
@@ -177,6 +260,7 @@ def protocol_reference(
     available: Sequence[int] | None = None,
     decode_vec: np.ndarray | None = None,
     support: np.ndarray | None = None,
+    grad_fn: Callable | None = None,
 ) -> tuple[PyTree, list[PyTree]]:
     """Paper protocol, literally.  Returns (decoded mean gradient, [g̃_w]).
 
@@ -186,9 +270,12 @@ def protocol_reference(
     reuse a decode solved elsewhere (e.g. a GradientCode's fast path) and
     ``support`` (m, k completion mask) for partial-work iterations: worker w
     encodes only the partitions it finished, g̃_w = Σ_j B[w,j]·mask[w,j]·g_j.
+    ``grad_fn`` lets long-lived callers (StepEngine) pass in a jitted
+    ``jax.grad(loss_fn)`` built once, instead of re-tracing it per call.
     """
     m, k = scheme.m, scheme.k
-    grad_fn = jax.jit(jax.grad(loss_fn))
+    if grad_fn is None:
+        grad_fn = jax.jit(jax.grad(loss_fn))
     part_grads = [
         grad_fn(params, jax.tree.map(lambda x, j=j: x[j], partition_batch)) for j in range(k)
     ]
@@ -255,43 +342,54 @@ def faithful_spmd_step(
     mesh: jax.sharding.Mesh,
     coding_axes: tuple[str, ...] = ("data",),
     compress: bool = False,
+    interpret: bool | None = None,
 ) -> Callable:
-    """Paper protocol under shard_map: per-worker encode, scaled-psum decode.
+    """Paper protocol under shard_map: flat Pallas encode, one-psum decode.
 
-    The returned function f(params, slot_batch, coeff, a, err) -> (grads, err')
-    expects leaves of slot_batch shaped (m, n_max, mb, ...) sharded over the
-    coding axes on dim 0; coeff = B coefficients (m, n_max); a = decode vector
-    scaled by 1/k, shape (m,); err = per-worker error-feedback pytree with
-    leaves shaped (m, *param.shape) (zeros unless ``compress``) — each coded
-    worker keeps its own quantization residual.
+    The returned function f(params, slot_batch, coeff, a, err) ->
+    (flat_grads, err') expects leaves of slot_batch shaped (m, n_max, mb, ...)
+    sharded over the coding axes on dim 0; coeff = effective B coefficients
+    (m, n_max) (slot mask — and any partial-work support mask — already folded
+    in); a = decode vector scaled by 1/k, shape (m,); err = per-worker flat
+    error-feedback buffer (m, D) when ``compress`` else (m, 1) (each coded
+    worker keeps its own quantization residual on the wire tensor).
+
+    Data path per worker: the per-slot gradient pytrees are flattened into a
+    (n_max, D) stack (``ravel_pytree``, fixed leaf order), the encode
+    g̃_w = Σ_s coeff[w,s]·g_s is ONE single-pass ``coded_reduce`` Pallas call
+    (``interpret=True`` off-TPU — auto-detected when ``interpret`` is None),
+    and the master decode g = Σ_w a_w·g̃_w is ONE psum over the flat (D,)
+    buffer instead of a per-leaf tree walk.  Callers unravel the result once
+    with the params structure's ``ravel_pytree`` inverse.
 
     Manual only over ``coding_axes`` — the 'model' axis stays auto so TP
     sharding inside loss_fn is still handled by GSPMD.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
 
     def worker_fn(params, slot_batch, coeff, a, err):
         # block shapes: slot_batch (1, n_max, mb, ...), coeff (1, n_max),
-        # a (1,), err leaves (1, *param.shape)
+        # a (1,), err (1, D) or (1, 1)
         sb = jax.tree.map(lambda x: x[0], slot_batch)
-        cw = coeff[0]
-        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        cw = coeff[0]  # (n_max,)
 
-        def slot_step(acc, xs):
-            slot, c = xs
+        def slot_grad(carry, slot):
             g = jax.grad(loss_fn)(params, slot)
-            return jax.tree.map(lambda A, G: A + c * G.astype(jnp.float32), acc, g), None
+            return carry, ravel_pytree(g)[0].astype(jnp.float32)
 
-        coded, _ = jax.lax.scan(slot_step, zero, (sb, cw))
+        _, gstack = jax.lax.scan(slot_grad, None, sb)  # (n_max, D)
+        coded = coded_reduce_pallas(gstack, cw, interpret=interpret)  # (D,)
         if compress:
-            # wire-format emulation: g̃_w is what travels, so quantize it here
-            coded = jax.tree.map(lambda g, e: g + e[0], coded, err)
-            deq = jax.tree.map(lambda g: _dequantize(*_quantize_int8(g)), coded)
-            new_err = jax.tree.map(lambda g, d: (g - d)[None], coded, deq)
+            # wire-format emulation: the flat g̃_w is what travels, so the
+            # int8 quantization + error feedback applies to it wholesale
+            coded = coded + err[0]
+            deq = _dequantize(*_quantize_int8(coded))
+            new_err = (coded - deq)[None]
             coded = deq
         else:
             new_err = err
-        scaled = jax.tree.map(lambda g: g * a[0], coded)
-        decoded = jax.lax.psum(scaled, coding_axes)
+        decoded = jax.lax.psum(coded * a[0], coding_axes)
         return decoded, new_err
 
     dp = jax.sharding.PartitionSpec(coding_axes)

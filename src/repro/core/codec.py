@@ -56,6 +56,11 @@ class Codec:
         if code.supports_rebalance and (code.max_load is None or code.max_load > self.n_slots):
             code.max_load = self.n_slots
         self.plan: CodedPlan = make_plan(code.scheme, self.n_slots)
+        # monotone plan-identity counter: bumps exactly when plan VALUES may
+        # have changed, so device-resident copies of the plan tensors
+        # (StepEngine's pack indices / coefficient caches) can be invalidated
+        # without comparing arrays
+        self.version: int = 0
 
     @classmethod
     def from_config(
@@ -140,3 +145,4 @@ class Codec:
         self.code.rebalance(c)
         self.plan = make_plan(self.code.scheme, self.n_slots)
         assert self.plan.slot_pids.shape == shape_before  # contract, DESIGN.md §4
+        self.version += 1  # invalidate device-resident plan copies (DESIGN.md §6)

@@ -5,10 +5,14 @@
   - "pallas_interpret":  kernel body interpreted on CPU (correctness runs)
   - "xla":               the pure-jnp oracle (dry-run lowering path — Pallas
                          TPU kernels do not lower to the CPU backend)
+  - "auto":              "pallas" on TPU, "pallas_interpret" elsewhere — the
+                         same backend probe the device-resident spmd wire
+                         path uses (coded_reduce only)
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
@@ -20,6 +24,8 @@ from repro.kernels.ssd_scan import ssd_scan_pallas
 def coded_reduce(g: jnp.ndarray, w: jnp.ndarray, impl: str = "pallas") -> jnp.ndarray:
     if impl == "xla":
         return ref.coded_reduce_ref(g, w)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
     return coded_reduce_pallas(g, w, interpret=(impl == "pallas_interpret"))
 
 

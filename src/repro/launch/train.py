@@ -125,11 +125,14 @@ def main(argv=None):
             print(f"resumed from step {last} (saved with m={meta.get('m')}, now m={args.m})")
 
     t0 = time.time()
-    sim_total = 0.0
-    for step in range(start, args.steps):
-        batch = data.batch(step)
-        state, metrics = trainer.step(state, batch)
-        sim_total += metrics["sim_iter_time"] if np.isfinite(metrics["sim_iter_time"]) else 0.0
+    totals = {"sim": 0.0}
+
+    def on_step(step, st, metrics):
+        # runs inside the double-buffered trainer loop (batch t+1 is already
+        # uploading while this fires — DESIGN.md §6)
+        totals["sim"] += (
+            metrics["sim_iter_time"] if np.isfinite(metrics["sim_iter_time"]) else 0.0
+        )
         if step % args.log_every == 0 or step == args.steps - 1:
             print(
                 f"step {step:5d} loss {metrics['loss']:.4f} gnorm {metrics['grad_norm']:.3f} "
@@ -139,15 +142,20 @@ def main(argv=None):
                 flush=True,
             )
         if ckpt and (step + 1) % args.ckpt_every == 0:
-            ckpt.save(step + 1, {"params": state.params, "opt": state.opt},
+            ckpt.save(step + 1, {"params": st.params, "opt": st.opt},
                       meta={"m": args.m, "scheme": args.scheme, "arch": args.arch})
+
+    state, metrics = trainer.run(state, data, args.steps, start=start, on_step=on_step)
+    sim_total = totals["sim"]
     if ckpt:
         ckpt.wait()
+    # metrics is {} when the loop ran zero steps (e.g. --resume at --steps)
     print(json.dumps({
-        "final_loss": metrics["loss"], "wall_s": time.time() - t0,
+        "final_loss": metrics.get("loss"), "wall_s": time.time() - t0,
         "sim_time_total_s": sim_total, "scheme": args.scheme, "m": args.m,
         "deadline_mode": args.deadline_mode,
-        "exact_fraction": metrics["exact_fraction"],
+        "exact_fraction": metrics.get("exact_fraction"),
+        "steps_run": max(args.steps - start, 0),
     }))
 
 

@@ -1,14 +1,20 @@
 """StepEngine: the coded training step behind one of three interchangeable
-gradient backends (DESIGN.md §3).
+gradient backends (DESIGN.md §3), on a fully device-resident data path
+(DESIGN.md §6).
 
   - ``fused``     — production path.  Encode/decode folded into per-sequence
                     loss weights; ONE jitted fwd/bwd + AdamW with donated
-                    buffers; XLA's DP reduction *is* the decode.
+                    buffers; XLA's DP reduction *is* the decode.  The slot
+                    pack (partition-major (k, mb, ...) -> (s+1)×-replicated
+                    flat coded batch) and the slot weights are computed
+                    INSIDE the jit from small per-step device inputs, so the
+                    host only ships the k·mb unique sequences per step.
   - ``reference`` — the paper's protocol verbatim (O(m·n) backward passes,
                     python loops).  Oracle for tests/debugging; applies the
                     same AdamW update so whole-run comparisons work.
   - ``spmd``      — the faithful shard_map protocol on a mesh: per-worker
-                    encode, optional int8 wire compression, scaled-psum
+                    flat-gradient encode through the ``coded_reduce`` Pallas
+                    kernel, optional int8 wire compression, single flat-psum
                     decode.  For protocol benchmarks and compression runs.
 
 All backends consume the same inputs — partition-major host batch + decode
@@ -19,6 +25,13 @@ swapping the execution backend is a constructor argument, not a code
 change.  An outcome's partial-work ``support`` mask zeroes unfinished
 partitions identically in every backend: fused/spmd via slot weights,
 reference via masked B rows.
+
+Device residency contract: the plan tensors (``slot_pids`` / ``slot_coeff``
+/ ``slot_mask``) are uploaded once per codec ``version`` and cached on
+device; elastic rebalances bump the version and the next step re-uploads —
+nothing else ever re-materializes them.  ``host_pack=True`` preserves the
+pre-§6 host-side numpy pack (oracle for equivalence tests and the
+``benchmarks/steptime.py`` before/after comparison).
 """
 
 from __future__ import annotations
@@ -29,13 +42,17 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import TrainConfig
 from repro.core.aggregator import (
     faithful_spmd_step,
+    pack_coded_batch,
+    pack_flat_device,
     protocol_reference,
     slot_weights,
-    support_slot_mask,
+    slot_weights_device,
+    support_slot_mask_device,
 )
 from repro.core.codec import Codec
 from repro.core.decoding import DecodeOutcome
@@ -63,7 +80,8 @@ class StepEngine:
     ``weighted_loss(params, batch) -> scalar`` where ``batch["weight"]``
     holds per-sequence loss weights (the LM contract; tests use tiny
     duck-typed models).  Shapes fed to the jitted path are fixed by the
-    codec's slot capacity, so elastic re-encodes never recompile.
+    codec's slot capacity, so elastic re-encodes never recompile — they only
+    invalidate the engine's device-resident plan cache (one re-upload).
     """
 
     def __init__(
@@ -76,6 +94,7 @@ class StepEngine:
         mesh: jax.sharding.Mesh | None = None,
         coding_axes: tuple[str, ...] = ("data",),
         compress: bool = False,
+        host_pack: bool = False,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
@@ -88,16 +107,45 @@ class StepEngine:
         self.mesh = mesh
         self.coding_axes = coding_axes
         self.compress = compress
+        self.host_pack = host_pack
+
+        # built ONCE: re-creating value_and_grad/grad transforms per call
+        # used to re-trace the whole model every step
+        self._vg = jax.value_and_grad(model.weighted_loss)
+
+        # device-resident plan cache, keyed by codec.version (DESIGN.md §6)
+        self._plan_version = -1
+        self._dev_pids: jnp.ndarray | None = None  # (m, n_slots) int32
+        self._dev_coeff: jnp.ndarray | None = None  # (m, n_slots) f32
+        self._dev_mask: jnp.ndarray | None = None  # (m, n_slots) f32
+        self._dev_coeff_mask: jnp.ndarray | None = None  # slot_coeff*slot_mask
+        self._ones_support: jnp.ndarray | None = None  # (m, k) f32
 
         self._fused_step = jax.jit(self._make_fused_step(), donate_argnums=(0, 1))
+        self._fused_grads = jax.jit(self._make_fused_grads())
+        if host_pack:
+            self._fused_step_host = jax.jit(
+                self._make_fused_step_host(), donate_argnums=(0, 1)
+            )
+            self._fused_grads_host = jax.jit(lambda p, batch: self._vg(p, batch)[1])
         if backend != "fused":
-            self._loss_fwd = jax.jit(model.weighted_loss)
+            self._loss_fwd = jax.jit(self._make_packed_loss())
             self._apply = jax.jit(self._make_apply(), donate_argnums=(0, 1))
+        if backend == "reference":
+            self._ref_grad = jax.jit(jax.grad(self._slot_loss))
         if backend == "spmd":
             self._spmd_grads = jax.jit(
                 faithful_spmd_step(self._slot_loss, mesh, coding_axes, compress=compress)
             )
-            self._err = None  # per-worker error feedback, built lazily
+            self._pack_slots = jax.jit(
+                lambda pbatch, idx: pack_coded_batch(pbatch, self.codec.plan, idx=idx)
+            )
+            self._coeff_support = jax.jit(
+                lambda coeff, pids, mask, sup: coeff
+                * support_slot_mask_device(sup, pids, mask)
+            )
+            self._err = None  # per-worker flat error feedback, built lazily
+            self._unravel = None  # flat (D,) -> params pytree, built lazily
 
     # -- state -------------------------------------------------------------
 
@@ -122,17 +170,48 @@ class StepEngine:
             return a.a, a.support
         return a, None
 
+    # -- device-resident plan views (DESIGN.md §6) --------------------------
+
+    def _device_plan(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(slot_pids, slot_coeff, slot_mask) as cached device arrays.
+
+        Uploaded once per codec version; an elastic ``rebalance`` bumps the
+        version, so the next step pays ONE (m, n_slots)-sized upload and the
+        steady-state host→device traffic is just the unique batch + the
+        (m,)/(m,k) decode inputs.
+        """
+        if self._plan_version != self.codec.version:
+            plan = self.codec.plan
+            self._dev_pids = jnp.asarray(plan.slot_pids)
+            self._dev_coeff = jnp.asarray(plan.slot_coeff)
+            self._dev_mask = jnp.asarray(plan.slot_mask)
+            self._dev_coeff_mask = jnp.asarray(plan.slot_coeff * plan.slot_mask)
+            self._plan_version = self.codec.version
+        return self._dev_pids, self._dev_coeff, self._dev_mask
+
+    def _support_dev(self, support: np.ndarray | None) -> jnp.ndarray:
+        """(m, k) completion mask as a device array; all-ones when the step
+        has no partial work (same trace either way — no recompiles)."""
+        if support is None:
+            if self._ones_support is None:
+                self._ones_support = jnp.ones((self.codec.m, self.codec.k), jnp.float32)
+            return self._ones_support
+        return jnp.asarray(np.asarray(support), jnp.float32)
+
     def _flat_batch(
         self, partition_batch: dict[str, np.ndarray], a: np.ndarray,
         support: np.ndarray | None = None,
     ) -> dict:
-        """Host-side pack: partition-major (k, mb, ...) -> flat coded batch
-        (m·n_slots·mb, ...) with decode/encode folded into per-seq weights."""
+        """HOST-side pack oracle: partition-major (k, mb, ...) -> flat coded
+        batch (m·n_slots·mb, ...) with decode/encode folded into per-seq
+        weights.  The pre-§6 data path — kept as the ``host_pack=True``
+        baseline the device pack is property-tested against."""
         plan = self.codec.plan
         idx = plan.slot_pids.reshape(-1)  # (m*n_slots,)
         out = {}
         mb = None
         for key, arr in partition_batch.items():
+            arr = np.asarray(arr)
             g = arr[idx]  # (m*n_slots, mb, ...)
             mb = arr.shape[1]
             out[key] = g.reshape((-1,) + arr.shape[2:])
@@ -148,39 +227,92 @@ class StepEngine:
             total_steps=self.tc.total_steps,
         )
 
-    def _make_fused_step(self):
+    def _adamw(self, params, grads, opt, step):
         tc = self.tc
+        lr = self._lr(step)
+        gnorm = global_norm(grads)
+        params, opt = adamw_update(
+            params, grads, opt,
+            lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
+            weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
+        )
+        return params, opt, gnorm, lr
 
-        def step_fn(params, opt, batch, step):
-            loss, grads = jax.value_and_grad(self.model.weighted_loss)(params, batch)
-            lr = self._lr(step)
-            gnorm = global_norm(grads)
-            params, opt = adamw_update(
-                params, grads, opt,
-                lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
-                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
-            )
+    def _device_batch(self, pbatch, a, support, pids, coeff, mask):
+        """In-jit pack + weights: the device-resident twin of _flat_batch."""
+        w = slot_weights_device(
+            jnp.asarray(a, jnp.float32), support, coeff, mask, pids, self.codec.k
+        )
+        return pack_flat_device(pbatch, pids, w)
+
+    def _make_fused_step(self):
+        def step_fn(params, opt, pbatch, a, support, pids, coeff, mask, step):
+            batch = self._device_batch(pbatch, a, support, pids, coeff, mask)
+            loss, grads = self._vg(params, batch)
+            params, opt, gnorm, lr = self._adamw(params, grads, opt, step)
             return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
         return step_fn
 
+    def _make_fused_step_host(self):
+        """Host-pack variant: consumes the pre-replicated flat batch."""
+
+        def step_fn(params, opt, batch, step):
+            loss, grads = self._vg(params, batch)
+            params, opt, gnorm, lr = self._adamw(params, grads, opt, step)
+            return params, opt, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+        return step_fn
+
+    def _make_fused_grads(self):
+        def grads_fn(params, pbatch, a, support, pids, coeff, mask):
+            batch = self._device_batch(pbatch, a, support, pids, coeff, mask)
+            return self._vg(params, batch)[1]
+
+        return grads_fn
+
+    def _make_packed_loss(self):
+        """Weighted loss at the decoded slot weights, packed in-jit (the
+        metric the non-fused backends report)."""
+
+        def loss_fn(params, pbatch, a, support, pids, coeff, mask):
+            batch = self._device_batch(pbatch, a, support, pids, coeff, mask)
+            return self.model.weighted_loss(params, batch)
+
+        return loss_fn
+
     def _make_apply(self):
         """Optimizer update for backends that produce grads out-of-line."""
-        tc = self.tc
 
         def apply_fn(params, opt, grads, step):
-            lr = self._lr(step)
-            gnorm = global_norm(grads)
-            params, opt = adamw_update(
-                params, grads, opt,
-                lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
-                weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
-            )
+            params, opt, gnorm, lr = self._adamw(params, grads, opt, step)
             return params, opt, {"grad_norm": gnorm, "lr": lr}
 
         return apply_fn
 
     # -- gradients (backend seam, used directly by the equivalence tests) ---
+
+    def _spmd_gradients(self, params: PyTree, partition_batch: dict, a, support) -> PyTree:
+        plan = self.codec.plan
+        pids, _, mask = self._device_plan()
+        pbatch = jax.tree.map(jnp.asarray, partition_batch)
+        sb = self._pack_slots(pbatch, pids.reshape(-1))
+        if support is None:
+            coeff = self._dev_coeff_mask  # cached, re-uploaded only on rebalance
+        else:
+            # unfinished partitions never left the worker: mask their slots
+            # out of the wire-format coded gradient g̃_w (on device — the
+            # (m, k) mask is the only per-step upload)
+            coeff = self._coeff_support(
+                self._dev_coeff_mask, pids, mask, self._support_dev(support)
+            )
+        a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
+        if self._unravel is None:
+            flat0, self._unravel = ravel_pytree(params)
+            width = int(flat0.size) if self.compress else 1
+            self._err = jnp.zeros((self.codec.m, width), jnp.float32)
+        flat, self._err = self._spmd_grads(params, sb, coeff, a_dev, self._err)
+        return self._unravel(flat)
 
     def gradients(self, params: PyTree, partition_batch: dict, a) -> PyTree:
         """Decoded gradient under decode vector ``a`` (ndarray, or a
@@ -189,34 +321,25 @@ class StepEngine:
         construction — on exact AND inexact decodes."""
         a, support = self._split_decode(a)
         if self.backend == "fused":
-            batch = {
-                k: jnp.asarray(v)
-                for k, v in self._flat_batch(partition_batch, a, support).items()
-            }
-            _, grads = jax.value_and_grad(self.model.weighted_loss)(params, batch)
-            return grads
+            if self.host_pack:
+                batch = {
+                    k: jnp.asarray(v)
+                    for k, v in self._flat_batch(partition_batch, a, support).items()
+                }
+                return self._fused_grads_host(params, batch)
+            pids, coeff, mask = self._device_plan()
+            pbatch = jax.tree.map(jnp.asarray, partition_batch)
+            return self._fused_grads(
+                params, pbatch, jnp.asarray(np.asarray(a), jnp.float32),
+                self._support_dev(support), pids, coeff, mask,
+            )
         if self.backend == "reference":
             decoded, _ = protocol_reference(
                 self._slot_loss, params, partition_batch, self.codec.scheme,
-                decode_vec=a, support=support,
+                decode_vec=a, support=support, grad_fn=self._ref_grad,
             )
             return decoded
-        # spmd: shard the slot batch over the coding axes and psum-decode
-        plan = self.codec.plan
-        sb = self.codec.pack(jax.tree.map(jnp.asarray, partition_batch))
-        coeff_np = plan.slot_coeff * plan.slot_mask
-        if support is not None:
-            # unfinished partitions never left the worker: mask their slots
-            # out of the wire-format coded gradient g̃_w
-            coeff_np = coeff_np * support_slot_mask(plan, support)
-        coeff = jnp.asarray(coeff_np)
-        a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
-        if self._err is None:
-            self._err = jax.tree.map(
-                lambda p: jnp.zeros((self.codec.m,) + p.shape, jnp.float32), params
-            )
-        grads, self._err = self._spmd_grads(params, sb, coeff, a_dev, self._err)
-        return grads
+        return self._spmd_gradients(params, partition_batch, a, support)
 
     # -- the train step -----------------------------------------------------
 
@@ -227,21 +350,30 @@ class StepEngine:
         (or :class:`DecodeOutcome` — inexact/partial steps use whatever
         arrived, shapes unchanged, so the jitted path never recompiles)."""
         a_vec, support = self._split_decode(a)
-        if self.backend == "fused":
+        if self.backend == "fused" and self.host_pack:
             batch = {
                 k: jnp.asarray(v)
                 for k, v in self._flat_batch(partition_batch, a_vec, support).items()
             }
-            params, opt, metrics = self._fused_step(
+            params, opt, metrics = self._fused_step_host(
                 state.params, state.opt, batch, jnp.asarray(state.step)
+            )
+        elif self.backend == "fused":
+            pids, coeff, mask = self._device_plan()
+            pbatch = jax.tree.map(jnp.asarray, partition_batch)
+            params, opt, metrics = self._fused_step(
+                state.params, state.opt, pbatch,
+                jnp.asarray(np.asarray(a_vec), jnp.float32),
+                self._support_dev(support), pids, coeff, mask, jnp.asarray(state.step),
             )
         else:
             grads = self.gradients(state.params, partition_batch, a)
-            batch = {
-                k: jnp.asarray(v)
-                for k, v in self._flat_batch(partition_batch, a_vec, support).items()
-            }
-            loss = self._loss_fwd(state.params, batch)
+            pids, coeff, mask = self._device_plan()
+            pbatch = jax.tree.map(jnp.asarray, partition_batch)
+            loss = self._loss_fwd(
+                state.params, pbatch, jnp.asarray(np.asarray(a_vec), jnp.float32),
+                self._support_dev(support), pids, coeff, mask,
+            )
             params, opt, metrics = self._apply(
                 state.params, state.opt, grads, jnp.asarray(state.step)
             )

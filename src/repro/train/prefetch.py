@@ -1,0 +1,63 @@
+"""Double-buffered host→device batch prefetch (DESIGN.md §6).
+
+The partition-major batch is the ONLY bulk host→device transfer the
+device-resident step loop makes (k·mb unique sequences — the (s+1)×
+replication happens on device).  ``DevicePrefetcher`` overlaps even that:
+batch t+1 is materialized (host numpy) AND uploaded (``jax.device_put``)
+on a background thread while the consumer runs step t, so the step never
+waits on batch generation or the wire.  Host batch builders are numpy-bound
+and the jitted step blocks in XLA — both release the GIL, so the overlap
+is real even in-process.
+
+``DevicePrefetcher`` is data-source agnostic: anything exposing
+``batch(step) -> pytree`` (e.g. :class:`~repro.data.pipeline.SyntheticData`)
+works, and the yielded leaves are committed device arrays the engine
+consumes without further copies.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Iterator, Protocol
+
+import jax
+
+__all__ = ["DevicePrefetcher"]
+
+
+class BatchSource(Protocol):
+    def batch(self, step: int) -> Any: ...
+
+
+class DevicePrefetcher:
+    """Iterate ``(step, device_batch)`` over ``[start, stop)`` with one
+    batch of lookahead built on a worker thread: while the consumer runs
+    step t, the thread generates and uploads batch t+1 (double buffering —
+    one slot in flight keeps peak memory at 2 batches).
+    """
+
+    def __init__(self, data: BatchSource, start: int, stop: int, device=None):
+        self.data = data
+        self.start = start
+        self.stop = stop
+        self.device = device
+
+    def _load(self, step: int):
+        batch = self.data.batch(step)
+        return (
+            jax.device_put(batch, self.device) if self.device is not None
+            else jax.device_put(batch)
+        )
+
+    def __iter__(self) -> Iterator[tuple[int, Any]]:
+        if self.start >= self.stop:
+            return
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            fut = pool.submit(self._load, self.start)
+            for step in range(self.start, self.stop):
+                cur = fut.result()
+                if step + 1 < self.stop:
+                    # enqueue generation+upload of the NEXT batch before
+                    # yielding — it runs while the consumer computes `step`
+                    fut = pool.submit(self._load, step + 1)
+                yield step, cur

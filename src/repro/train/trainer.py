@@ -31,6 +31,8 @@ paper's "avg time per iteration".
 
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import numpy as np
 
@@ -41,6 +43,7 @@ from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
 from repro.models.lm import LM
 from repro.train.elastic import ElasticController
 from repro.train.engine import StepEngine, TrainerState
+from repro.train.prefetch import DevicePrefetcher
 
 __all__ = ["CodedTrainer", "TrainerState"]
 
@@ -98,6 +101,31 @@ class CodedTrainer:
 
     def init_state(self, rng: jax.Array) -> TrainerState:
         return self.engine.init_state(rng)
+
+    def run(
+        self,
+        state: TrainerState,
+        data,
+        steps: int,
+        *,
+        start: int = 0,
+        on_step: Callable[[int, TrainerState, dict], None] | None = None,
+    ) -> tuple[TrainerState, dict[str, float]]:
+        """Device-resident training loop with double-buffered prefetch
+        (DESIGN.md §6): batch t+1 is generated and uploaded on a worker
+        thread while step t computes, so the only bulk host→device
+        transfer — the k·mb unique sequences — overlaps compute.  ``data``
+        is any
+        ``batch(step) -> partition-major pytree`` source; ``on_step`` is
+        called after every step (logging, checkpointing).  Returns the final
+        state and the last step's metrics.
+        """
+        metrics: dict[str, float] = {}
+        for step, batch in DevicePrefetcher(data, start, steps):
+            state, metrics = self.step(state, batch)
+            if on_step is not None:
+                on_step(step, state, metrics)
+        return state, metrics
 
     def rebuild_scheme(self, c: np.ndarray) -> None:
         """Manual elastic re-encode (host-side, shape-stable)."""

@@ -35,11 +35,18 @@ def _toy():
 
 
 def check_faithful_spmd():
+    """Flat wire format (DESIGN.md §6): per-worker Pallas encode of the
+    ravelled gradient stack, ONE psum decode over the (D,) buffer —
+    matches the per-partition ground truth, compressed path stays close."""
+    from jax.flatten_util import ravel_pytree
+
     from repro.core import Decoder, build_heter_aware
     from repro.core.aggregator import faithful_spmd_step, make_plan, pack_coded_batch
 
     mesh = make_auto_mesh((4, 2), ("data", "model"))
     loss_fn, params, r = _toy()
+    flat0, unravel = ravel_pytree(params)
+    D = int(flat0.size)
     params = jax.device_put(
         params,
         {"w1": NamedSharding(mesh, P(None, "model")), "w2": NamedSharding(mesh, P("model", None))},
@@ -55,8 +62,7 @@ def check_faithful_spmd():
     sb = jax.device_put(pack_coded_batch(pb, plan), NamedSharding(mesh, P("data")))
     coeff = jax.device_put(jnp.asarray(plan.slot_coeff * plan.slot_mask), NamedSharding(mesh, P("data")))
     a_dev = jax.device_put(jnp.asarray(a, jnp.float32), NamedSharding(mesh, P("data")))
-    err = jax.tree.map(lambda p: jnp.zeros((4,) + p.shape, jnp.float32), params)
-    err = jax.device_put(err, NamedSharding(mesh, P("data")))
+    err = jax.device_put(jnp.zeros((4, 1), jnp.float32), NamedSharding(mesh, P("data")))
 
     gt = jax.tree.map(jnp.zeros_like, params)
     for j in range(k):
@@ -64,19 +70,21 @@ def check_faithful_spmd():
         gt = jax.tree.map(lambda A, b: A + b / k, gt, g)
 
     step = jax.jit(faithful_spmd_step(loss_fn, mesh, ("data",), compress=False))
-    grads, _ = step(params, sb, coeff, a_dev, err)
-    for x, y in zip(jax.tree.leaves(grads), jax.tree.leaves(gt)):
+    flat, _ = step(params, sb, coeff, a_dev, err)
+    assert flat.shape == (D,), flat.shape
+    for x, y in zip(jax.tree.leaves(unravel(flat)), jax.tree.leaves(gt)):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
 
     # compressed wire format stays close + error feedback is populated
+    err_c = jax.device_put(jnp.zeros((4, D), jnp.float32), NamedSharding(mesh, P("data")))
     step_c = jax.jit(faithful_spmd_step(loss_fn, mesh, ("data",), compress=True))
-    gc, err2 = step_c(params, sb, coeff, a_dev, err)
+    fc, err2 = step_c(params, sb, coeff, a_dev, err_c)
     rel = max(
         float(np.max(np.abs(np.asarray(x) - np.asarray(y))) / (np.max(np.abs(np.asarray(y))) + 1e-9))
-        for x, y in zip(jax.tree.leaves(gc), jax.tree.leaves(gt))
+        for x, y in zip(jax.tree.leaves(unravel(fc)), jax.tree.leaves(gt))
     )
     assert rel < 0.05, rel
-    assert any(float(np.abs(np.asarray(e)).max()) > 0 for e in jax.tree.leaves(err2))
+    assert float(np.abs(np.asarray(err2)).max()) > 0
     print("faithful_spmd ok")
 
 
