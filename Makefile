@@ -2,7 +2,7 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast test-tier2 bench bench-smoke quickstart
+.PHONY: test test-fast test-tier2 bench bench-smoke bench-scaling quickstart
 
 test:
 	./scripts/test.sh
@@ -18,6 +18,9 @@ bench:  ## full-scale benchmark run (slow)
 
 bench-smoke:  ## CI-speed benchmark smoke: all sections incl. fig6, shrunk iters
 	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/run.py
+
+bench-scaling:  ## large-m control-plane gate: m in {20,64,256} x schemes; fails if the m=256 budget is blown
+	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/scaling.py
 
 quickstart:
 	PYTHONPATH=src python examples/quickstart.py

@@ -100,10 +100,10 @@ def run(n_steps: int = 60, lr: float = 0.02, images_per_iter: int = 64, seed: in
                         if not outcome.exact:
                             continue  # skipped iteration, clock already paid
                 else:
-                    tick = ctrl.tick_deadline(profile)
+                    tick = ctrl.tick(profile)
                     outcome = tick.outcome
                     clock += tick.T
-                    ctrl.observe_partial(tick)
+                    ctrl.observe(tick)
                     if outcome.n_used == 0:
                         continue  # nothing arrived: skip like the trainer,
                         # clock paid, no wasted fwd/bwd on zero weights

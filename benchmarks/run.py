@@ -21,7 +21,7 @@ def _fast() -> bool:
 
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
-    from benchmarks import fig6_approx, kernels_bench, roofline_table, steptime
+    from benchmarks import fig6_approx, kernels_bench, roofline_table, scaling, steptime
 
     t0 = time.time()
     all_rows = []
@@ -82,6 +82,14 @@ def main() -> None:
     claims = steptime.derived_claims(rows)
     all_rows += rows
     summary.append(("steptime", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
+    # --- large-m control-plane scaling (DESIGN.md §7) ---
+    t = time.time()
+    rows = scaling.run()
+    claims = scaling.derived_claims(rows)
+    all_rows += rows
+    summary.append(("scaling", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- kernels ---

@@ -9,4 +9,6 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 if [[ "${RUN_TIER2:-0}" == "1" ]]; then
   echo "== tier-2: benchmark smoke (BENCH_FAST=1 benchmarks/run.py) =="
   make bench-smoke
+  echo "== tier-2: large-m scaling gate (BENCH_FAST=1 benchmarks/scaling.py) =="
+  make bench-scaling
 fi

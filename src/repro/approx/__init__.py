@@ -20,13 +20,14 @@ flag, RMS residual ``‖a·B_eff − 1‖₂/√k`` — produced by every decode
 and consumed by every backend.
 """
 
-from repro.approx.deadline import DEADLINE_MODES, DeadlinePolicy, DeadlineTick
+from repro.approx.deadline import DEADLINE_MODES, DeadlinePolicy, DeadlineTick, StepTick
 from repro.approx.schemes import BernoulliCode, PartialWorkCode, build_bernoulli
 from repro.core.decoding import DecodeOutcome, best_effort_decode_vector
 
 __all__ = [
     "DEADLINE_MODES",
     "DeadlinePolicy",
+    "StepTick",
     "DeadlineTick",
     "DecodeOutcome",
     "best_effort_decode_vector",

@@ -1,4 +1,4 @@
-"""Deadline-driven inexact stepping (DESIGN.md §5).
+"""Deadline-driven stepping policies (DESIGN.md §5/§7).
 
 A :class:`DeadlinePolicy` decides *when* a BSP iteration steps and *what*
 decode it steps with, given the per-partition arrival clocks of one
@@ -13,16 +13,25 @@ iteration (:class:`~repro.core.simulator.PartitionTimes`):
   exactness while refusing to wait for the long tail.
 - ``fixed_deadline``  — always step at the deadline with whatever arrived.
 
+The paper's exact semantics are the degenerate member of the same family:
+:meth:`DeadlinePolicy.exact` is ``exact_first`` with an infinite deadline
+and ``step_inexact=False`` (an iteration that cannot decode exactly is
+skipped, never stepped best-effort).  The trainer therefore has ONE step
+path — there is no separate exact loop.
+
 The deadline itself *adapts*: unless pinned via ``deadline_s``, it is
 ``slack ×`` the iteration time the EWMA throughput estimates predict for an
 exact decode — so as the estimator converges on the true speeds, the
 deadline tightens around the genuinely achievable iteration time.
 
-Schemes declaring ``reports_partial_work`` are decoded from completed
-partition *prefixes* (``decode_partial`` over ``support_at``); all-or-
-nothing schemes are decoded from the finished-worker set through the
-scheme's cached ``decode_outcome`` path, so repeated straggler patterns hit
-the decode LRU even when inexact.
+Resolution is arrival-driven (DESIGN.md §7): all-or-nothing schemes stream
+whole-worker completion events through an incremental
+:class:`~repro.core.decoding.DecodableSetTracker` — O(rank·k) per event, a
+full solve only at the chosen instant — so every event is examined even at
+large m.  Schemes declaring ``reports_partial_work`` are decoded from
+completed partition *prefixes* (``decode_partial`` over ``support_at``);
+their effective-B rows grow per event, outside the tracker's rank-update
+model, so they keep the bounded event scan (``max_events``).
 """
 
 from __future__ import annotations
@@ -31,57 +40,79 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.decoding import DecodeError, DecodeOutcome
+from repro.core.decoding import DecodableSetTracker, DecodeError, DecodeOutcome
 from repro.core.registry import GradientCode
 from repro.core.simulator import PartitionTimes
 
-__all__ = ["DEADLINE_MODES", "DeadlinePolicy", "DeadlineTick"]
+__all__ = ["DEADLINE_MODES", "DeadlinePolicy", "StepTick", "DeadlineTick"]
 
 DEADLINE_MODES = ("exact_first", "bounded_residual", "fixed_deadline")
 
 
 @dataclasses.dataclass(frozen=True)
-class DeadlineTick:
-    """One deadline-policy iteration: chosen step time + decode outcome.
+class StepTick:
+    """One control-plane iteration: chosen step time + decode outcome +
+    the observation the throughput estimator should fold in.
 
     Attributes:
-      T: wall-clock instant the policy stepped at.
-      deadline: the deadline in force (adaptive or fixed).
+      T: wall-clock instant the policy stepped at (inf: exact mode failed
+        to decode — the iteration is skipped and the clock is unbounded).
+      deadline: the deadline in force (inf in exact mode).
       outcome: the decode taken — exact or best-effort.
       ptimes: the iteration's per-partition clocks (for metrics/debugging).
+      n_used: workers entering the decode — the step metric (exact mode
+        counts the earliest-decodable used set, deadline mode the decode
+        vector's support).
       work_done: (m,) work observed by T — completed partitions, or for
         ``censored`` workers the upper BOUND they provably failed to beat.
       censored: (m,) True where ``work_done`` is a right-censored bound
         (deadline-missers with no progress signal), not a real sample; the
         estimator must only let it LOWER an estimate, never raise it.
+      observe_full: exact-mode observation semantics — fold the full
+        finish-time vector (every worker's true completion is known once
+        the iteration ends), and only when the iteration stepped.
     """
 
     T: float
     deadline: float
     outcome: DecodeOutcome
     ptimes: PartitionTimes
+    n_used: int
     work_done: np.ndarray
     censored: np.ndarray
+    observe_full: bool
+
+
+# back-compat alias (pre-§7 name, deadline-mode only)
+DeadlineTick = StepTick
 
 
 @dataclasses.dataclass
 class DeadlinePolicy:
-    """When to step an iteration that may not decode exactly.
+    """When to step an iteration — the single stepping policy, exact
+    semantics included.
 
     Args:
       mode: one of :data:`DEADLINE_MODES`.
       target_residual: RMS residual at which ``bounded_residual`` steps
         (0 = wait for exact, i.e. ``exact_first`` with a cap).
       slack: adaptive deadline = slack × EWMA-predicted exact iteration time.
-      deadline_s: fixed deadline override (seconds); None = adapt.
+      deadline_s: fixed deadline override (seconds); None = adapt, inf =
+        never time out (exact mode).
+      step_inexact: False = the paper's exact semantics — an iteration whose
+        outcome is inexact is skipped by the trainer instead of stepped
+        best-effort.  :meth:`exact` is the canonical False instance.
       max_events: cap on candidate step instants evaluated per iteration
-        (each costs one lstsq); events are subsampled evenly beyond it.
+        for partial-work schemes (each costs one lstsq on the masked B);
+        events are subsampled evenly beyond it.  All-or-nothing schemes
+        stream through the incremental tracker and need no cap.
     """
 
     mode: str = "bounded_residual"
     target_residual: float = 0.2
     slack: float = 1.5
     deadline_s: float | None = None
+    step_inexact: bool = True
     max_events: int = 64
 
     def __post_init__(self) -> None:
@@ -89,6 +120,13 @@ class DeadlinePolicy:
             raise ValueError(f"unknown deadline mode {self.mode!r}; choose from {DEADLINE_MODES}")
         if self.target_residual < 0:
             raise ValueError("target_residual must be >= 0")
+
+    @classmethod
+    def exact(cls) -> "DeadlinePolicy":
+        """The paper's exact stepping semantics as a policy: wait for the
+        earliest exact-decodable moment, never time out, never step an
+        inexact outcome."""
+        return cls(mode="exact_first", deadline_s=np.inf, step_inexact=False)
 
     # -- deadline adaptation -----------------------------------------------
 
@@ -110,43 +148,89 @@ class DeadlinePolicy:
 
     # -- per-iteration resolution ------------------------------------------
 
-    def _outcome_at(self, code: GradientCode, ptimes: PartitionTimes, t: float) -> DecodeOutcome:
+    def _outcome_at(
+        self, code: GradientCode, ptimes: PartitionTimes, t: float, partial: bool = True
+    ) -> DecodeOutcome:
         """Best decode achievable at instant t: completed prefixes for
-        partial-work schemes, finished workers (LRU-cached) otherwise."""
-        if code.reports_partial_work:
+        partial-work schemes, finished workers (LRU-cached) otherwise.
+        ``partial=False`` forces the whole-worker view — exact-mode callers
+        never step a prefix decode, so they resolve the set semantics the
+        exact contract defines."""
+        if partial and code.reports_partial_work:
             return code.decode_partial(ptimes.support_at(t))
         finished = [
             w
             for w in range(ptimes.m)
-            if len(ptimes.partitions[w]) and ptimes.finish[w] <= t
+            if len(ptimes.partitions[w])
+            and np.isfinite(ptimes.finish[w])
+            and ptimes.finish[w] <= t
         ]
         return code.decode_outcome(finished)
 
-    def resolve(
+    def _resolve_bounded_streaming(
         self, code: GradientCode, ptimes: PartitionTimes, deadline: float
     ) -> tuple[float, DecodeOutcome]:
-        """Pick (step time τ, decode outcome) for one iteration's clocks."""
+        """bounded_residual for all-or-nothing schemes, arrival-driven: the
+        finished-worker set only changes at whole-worker completions, and
+        the tracker prices each one at O(rank·k) — every event is examined,
+        no subsampling, a real solve only at trigger instants."""
+        tracker = DecodableSetTracker(code.B)
+        finished: list[int] = []
+        # the tracker's residual equals the solver's to ~fp noise; widen the
+        # threshold by a generous margin and let the scheme's real solver
+        # confirm before committing to a step instant (a false trigger only
+        # costs one cached solve, a missed one would delay the step)
+        trigger = self.target_residual + 1e-4
+        last_t: float | None = None
+        for t, w in ptimes.worker_stream(deadline):
+            finished.append(int(w))
+            tracker.add(int(w))
+            last_t = float(t)
+            if tracker.maybe_decodable or tracker.residual <= trigger:
+                outcome = code.decode_outcome(finished)
+                if outcome.exact or outcome.residual <= self.target_residual:
+                    return float(t), outcome
+        # nothing qualified: the information set at the deadline is the set
+        # of workers that finished by it
+        return deadline, self._outcome_at(code, ptimes, last_t if last_t is not None else deadline)
+
+    def resolve(
+        self, code: GradientCode, ptimes: PartitionTimes, deadline: float
+    ) -> tuple[float, DecodeOutcome, tuple[int, ...] | None]:
+        """Pick (step time τ, decode outcome, used set) for one iteration's
+        clocks.  ``used`` is the earliest-decodable worker set when the
+        exact Eq. 3 search chose the instant, None otherwise."""
         if self.mode == "fixed_deadline":
-            return deadline, self._outcome_at(code, ptimes, deadline)
+            return deadline, self._outcome_at(code, ptimes, deadline), None
 
         if self.mode == "exact_first":
             try:
                 t, used = code.earliest_decodable(ptimes.finish)
                 if t <= deadline:
-                    return float(t), code.decode_outcome(used)
+                    return float(t), code.decode_outcome(used), used
             except DecodeError:
                 pass
-            return deadline, self._outcome_at(code, ptimes, deadline)
+            return (
+                deadline,
+                self._outcome_at(code, ptimes, deadline, partial=self.step_inexact),
+                None,
+            )
 
-        # bounded_residual: step at the first arrival event satisfying the
-        # bound.  The residual is NOT monotone in t (a completing partition
-        # can RAISE the lstsq misfit — heter-aware B has negative entries),
-        # so finding the earliest qualifying instant genuinely requires a
-        # forward scan; a bisection would skip qualifying events whenever a
-        # later event regresses past the target.  The scan exits at the
-        # first hit — cheap in the common early-step case — and events are
-        # evenly subsampled to max_events (endpoints kept) to bound the
-        # worst-case solve count.
+        # bounded_residual
+        if not code.reports_partial_work:
+            t, outcome = self._resolve_bounded_streaming(code, ptimes, deadline)
+            return t, outcome, None
+
+        # Partial-work schemes: the effective-B rows GROW per event, outside
+        # the tracker's append-only rank-update model, so scan arrival
+        # events with masked solves.  The residual is NOT monotone in t (a
+        # completing partition can RAISE the lstsq misfit — heter-aware B
+        # has negative entries), so finding the earliest qualifying instant
+        # genuinely requires a forward scan; a bisection would skip
+        # qualifying events whenever a later event regresses past the
+        # target.  The scan exits at the first hit — cheap in the common
+        # early-step case — and events are evenly subsampled to max_events
+        # (endpoints kept) to bound the worst-case solve count.
         events = ptimes.event_times(deadline)
         if events.size > self.max_events:
             idx = np.unique(np.linspace(0, events.size - 1, self.max_events).round().astype(int))
@@ -155,9 +239,9 @@ class DeadlinePolicy:
         for t in events:
             last = self._outcome_at(code, ptimes, float(t))
             if last.exact or last.residual <= self.target_residual:
-                return float(t), last
+                return float(t), last, None
         if last is not None:
             # nothing qualified: nothing arrives in (events[-1], deadline],
             # so the last event's (already solved) outcome IS the deadline's
-            return deadline, last
-        return deadline, self._outcome_at(code, ptimes, deadline)
+            return deadline, last, None
+        return deadline, self._outcome_at(code, ptimes, deadline), None

@@ -34,14 +34,29 @@ from repro.core.coding import (
     satisfies_condition1,
 )
 from repro.core.decoding import (
+    DecodableSetTracker,
     DecodeError,
     DecodeOutcome,
     Decoder,
     best_effort_decode_vector,
+    earliest_decodable_stream,
     solve_decode_vector,
+    worker_arrival_order,
 )
-from repro.core.groups import build_group_based, find_all_groups, prune_groups
-from repro.core.simulator import ClusterSim, PartitionTimes, theoretical_optimal_time
+from repro.core.groups import (
+    GroupSearchResult,
+    build_group_based,
+    find_all_groups,
+    find_greedy_groups,
+    prune_groups,
+)
+from repro.core.simulator import (
+    ArrivalEvent,
+    ArrivalStream,
+    ClusterSim,
+    PartitionTimes,
+    theoretical_optimal_time,
+)
 from repro.core.straggler import (
     ComposedModel,
     FaultModel,
@@ -75,13 +90,20 @@ __all__ = [
     "build_group_based",
     "make_scheme",
     "satisfies_condition1",
+    "DecodableSetTracker",
     "DecodeError",
     "DecodeOutcome",
     "Decoder",
     "best_effort_decode_vector",
+    "earliest_decodable_stream",
     "solve_decode_vector",
+    "worker_arrival_order",
+    "GroupSearchResult",
     "find_all_groups",
+    "find_greedy_groups",
     "prune_groups",
+    "ArrivalEvent",
+    "ArrivalStream",
     "ClusterSim",
     "PartitionTimes",
     "theoretical_optimal_time",

@@ -19,6 +19,8 @@ partition on the same worker, which is useless for straggler tolerance).
 from __future__ import annotations
 
 import dataclasses
+import itertools
+from functools import cached_property
 from typing import Sequence
 
 import numpy as np
@@ -52,9 +54,37 @@ class Allocation:
     def m(self) -> int:
         return len(self.counts)
 
+    @cached_property
+    def _flat(self) -> tuple[np.ndarray, np.ndarray]:
+        """(worker_ids, partition_ids) of every (worker, partition) pair, in
+        allocation order — the vectorized view every large-m consumer
+        (support, holders, plan build) derives from in one pass."""
+        counts = np.asarray(self.counts, dtype=np.int64)
+        workers = np.repeat(np.arange(self.m, dtype=np.int64), counts)
+        pids = np.fromiter(
+            itertools.chain.from_iterable(self.partitions), dtype=np.int64,
+            count=int(counts.sum()),
+        )
+        return workers, pids
+
     def holders(self, j: int) -> tuple[int, ...]:
         """Workers holding partition ``j`` (exactly s+1 of them)."""
-        return tuple(i for i, ps in enumerate(self.partitions) if j in ps)
+        workers, pids = self._flat
+        return tuple(int(w) for w in np.sort(workers[pids == j]))
+
+    def holders_matrix(self) -> np.ndarray:
+        """(k, s+1) int64 holders of every partition, workers ascending —
+        the batched view Alg. 1 consumes (one pass, no per-partition scan).
+        Raises when any partition does not have exactly s+1 holders."""
+        workers, pids = self._flat
+        per_part = np.bincount(pids, minlength=self.k)
+        if np.any(per_part != self.s + 1):
+            j = int(np.argmax(per_part != self.s + 1))
+            raise ValueError(
+                f"partition {j} has {int(per_part[j])} holders, expected s+1={self.s + 1}"
+            )
+        order = np.lexsort((workers, pids))  # partition-major, worker ascending
+        return workers[order].reshape(self.k, self.s + 1)
 
     def support(self) -> np.ndarray:
         return support_matrix(self)
@@ -83,22 +113,26 @@ def proportional_counts(
         raise ValueError(f"k*(s+1)={total} copies cannot fit on m={m} workers with n_i<={cap}")
 
     ideal = total * c / c.sum()
-    k = cap  # reuse the cap in the clamped rounding below
-    n = np.minimum(np.floor(ideal).astype(np.int64), k)
-    # Largest-remainder distribution of the leftover copies.
+    n = np.minimum(np.floor(ideal).astype(np.int64), cap)
+    # Largest-remainder distribution of the leftover copies: round-robin in
+    # remainder-priority order, skipping workers at cap.  Vectorized as a
+    # water-fill — after t full rounds worker w (room r_w) has received
+    # min(r_w, t) extras; binary-search the last full round, then hand the
+    # remainder to the first still-open workers in priority order.
     leftover = total - int(n.sum())
-    # remainder priority; workers already at cap k are ineligible.
-    remainder = ideal - np.floor(ideal)
-    order = np.argsort(-remainder, kind="stable")
-    idx = 0
-    while leftover > 0:
-        w = order[idx % m]
-        if n[w] < k:
-            n[w] += 1
-            leftover -= 1
-        idx += 1
-        if idx > 4 * m * (k + 1):  # pragma: no cover - guarded by feasibility check
-            raise RuntimeError("allocation failed to converge")
+    if leftover > 0:
+        remainder = ideal - np.floor(ideal)
+        order = np.argsort(-remainder, kind="stable")
+        room = (cap - n)[order].astype(np.int64)
+        rounds = np.arange(int(room.max()) + 1)
+        given = np.minimum(room[None, :], rounds[:, None]).sum(axis=1)
+        t = int(np.searchsorted(given, leftover, side="right") - 1)
+        extra = np.minimum(room, t)
+        partial = leftover - int(given[t])
+        if partial > 0:
+            open_idx = np.flatnonzero(room > t)[:partial]
+            extra[open_idx] += 1
+        n[order] += extra
     assert int(n.sum()) == total
     return n
 
@@ -111,14 +145,16 @@ def cyclic_assignment(k: int, counts: Sequence[int]) -> tuple[tuple[int, ...], .
     total length is ``k*(s+1)``, every partition is covered exactly ``s+1``
     times, each time by a different worker (since ``n_i <= k``).
     """
-    out: list[tuple[int, ...]] = []
-    start = 0
-    for n_i in counts:
-        if n_i > k:
-            raise ValueError(f"n_i={n_i} exceeds k={k}")
-        out.append(tuple((start + j) % k for j in range(n_i)))
-        start += int(n_i)
-    return tuple(out)
+    counts_arr = np.asarray(counts, dtype=np.int64)
+    if counts_arr.size and int(counts_arr.max(initial=0)) > k:
+        raise ValueError(f"n_i={int(counts_arr.max())} exceeds k={k}")
+    # vectorized arcs: laid end-to-end, worker i's arc starts where i−1's
+    # ended, so the flat partition sequence is simply 0,1,2,... mod k
+    flat = np.arange(int(counts_arr.sum())) % k
+    bounds = np.cumsum(counts_arr)[:-1]
+    return tuple(
+        tuple(int(p) for p in chunk) for chunk in np.split(flat, bounds)
+    )
 
 
 def allocate(
@@ -138,6 +174,6 @@ def uniform_allocation(k: int, s: int, m: int) -> Allocation:
 def support_matrix(alloc: Allocation) -> np.ndarray:
     """Boolean (m, k) support structure of B (Eq. 7)."""
     sup = np.zeros((alloc.m, alloc.k), dtype=bool)
-    for i, ps in enumerate(alloc.partitions):
-        sup[i, list(ps)] = True
+    workers, pids = alloc._flat
+    sup[workers, pids] = True
     return sup

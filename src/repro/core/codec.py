@@ -136,6 +136,22 @@ class Codec:
         """Partition-major (k, mb, ...) -> slot-major (m, n_slots, mb, ...)."""
         return pack_coded_batch(partition_batch, self.plan)
 
+    # -- checkpoint state ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able plan identity: the code's construction state + the
+        monotone plan version, so a restore reproduces B (bit-for-bit, by
+        replaying the build from its saved RNG state) AND the device-cache
+        invalidation counter."""
+        return {"code": self.code.state_dict(), "version": self.version}
+
+    def load_state_dict(self, state: dict) -> None:
+        shape_before = self.plan.slot_pids.shape
+        self.code.load_state_dict(state["code"])
+        self.plan = make_plan(self.code.scheme, self.n_slots)
+        assert self.plan.slot_pids.shape == shape_before  # contract, DESIGN.md §4
+        self.version = int(state["version"])
+
     # -- elastic -----------------------------------------------------------
 
     def rebalance(self, c: Sequence[float]) -> None:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Sequence
 
 import numpy as np
@@ -80,25 +81,24 @@ class CodingScheme:
 
 def _build_from_support(alloc: Allocation, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
     """Alg. 1 body: returns (B, C) with C·B = 1 for an arbitrary support whose
-    every partition has exactly ``s+1`` holders."""
+    every partition has exactly ``s+1`` holders.
+
+    Fully batched: the k per-partition (s+1)×(s+1) systems are stacked and
+    solved in one LAPACK call (conditioning checked the same way), so plan
+    builds stay milliseconds at m=256+ instead of k Python-level solves.
+    """
     m, k, s = alloc.m, alloc.k, alloc.s
-    holders = [alloc.holders(j) for j in range(k)]
-    for j, h in enumerate(holders):
-        if len(h) != s + 1:
-            raise ValueError(f"partition {j} has {len(h)} holders, expected s+1={s + 1}")
-    ones = np.ones(s + 1, dtype=np.float64)
+    holders = alloc.holders_matrix()  # (k, s+1), validates s+1 holders each
+    ones = np.ones((k, s + 1, 1), dtype=np.float64)
     for _ in range(_MAX_REDRAWS):
         C = rng.uniform(size=(s + 1, m))
+        Cj = C[:, holders].transpose(1, 0, 2)  # (k, s+1, s+1) per-partition
+        if float(np.linalg.cond(Cj).max()) > _COND_MAX:
+            continue
+        sol = np.linalg.solve(Cj, ones)[..., 0]  # (k, s+1)
         B = np.zeros((m, k), dtype=np.float64)
-        ok = True
-        for j, h in enumerate(holders):
-            Cj = C[:, list(h)]
-            if np.linalg.cond(Cj) > _COND_MAX:
-                ok = False
-                break
-            B[list(h), j] = np.linalg.solve(Cj, ones)
-        if ok:
-            return B, C
+        B[holders.reshape(-1), np.repeat(np.arange(k), s + 1)] = sol.reshape(-1)
+        return B, C
     raise RuntimeError("could not draw a well-conditioned C")  # pragma: no cover
 
 
@@ -195,14 +195,43 @@ def make_scheme(
     return get_scheme(name, m=m, k=k, s=s, c=c, rng=rng, max_load=max_load).scheme
 
 
-def satisfies_condition1(B: np.ndarray, s: int, atol: float = 1e-6) -> bool:
-    """Exhaustively check Condition 1 (Lemma 1) — every (m−s)-subset of rows
-    spans the all-ones vector.  Exponential; for tests with small m."""
-    m, k = B.shape
+def _spans_ones(rows: np.ndarray, atol: float) -> bool:
+    k = rows.shape[1]
     ones = np.ones(k)
-    for I in itertools.combinations(range(m), m - s):
-        rows = B[list(I)]
-        x, residuals, *_ = np.linalg.lstsq(rows.T, ones, rcond=None)
-        if not np.allclose(rows.T @ x, ones, atol=atol):
+    x, *_ = np.linalg.lstsq(rows.T, ones, rcond=None)
+    return bool(np.allclose(rows.T @ x, ones, atol=atol))
+
+
+def satisfies_condition1(
+    B: np.ndarray,
+    s: int,
+    atol: float = 1e-6,
+    max_patterns: int = 20_000,
+    rng: np.random.Generator | int | None = 0,
+) -> bool:
+    """Check Condition 1 (Lemma 1) — every (m−s)-subset of rows spans the
+    all-ones vector.
+
+    Exhaustive when ``C(m, s) <= max_patterns`` (all of paper scale);
+    beyond that — the large-m regime, where enumeration is astronomically
+    exponential — ``max_patterns`` uniformly sampled straggler patterns are
+    verified instead.  A sampled pass is probabilistic evidence, not proof;
+    a sampled *failure* is still a definite counterexample."""
+    m, k = B.shape
+    if s <= 0:
+        return _spans_ones(B, atol)
+    n_patterns = math.comb(m, s)
+    if n_patterns <= max_patterns:
+        for I in itertools.combinations(range(m), m - s):
+            if not _spans_ones(B[list(I)], atol):
+                return False
+        return True
+    rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+    alive = np.ones(m, dtype=bool)
+    for _ in range(max_patterns):
+        dead = rng.choice(m, size=s, replace=False)
+        alive[:] = True
+        alive[dead] = False
+        if not _spans_ones(B[alive], atol):
             return False
     return True

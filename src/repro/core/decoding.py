@@ -40,11 +40,22 @@ __all__ = [
     "DecodeOutcome",
     "solve_decode_vector",
     "best_effort_decode_vector",
+    "DecodableSetTracker",
+    "worker_arrival_order",
     "earliest_decodable_prefix",
+    "earliest_decodable_stream",
     "Decoder",
 ]
 
 _ATOL = 1e-6
+# np.allclose(fit, 1, atol=_ATOL) with default rtol — the exact-decode check
+# used by both solver paths — accepts per-component misfit up to this:
+_EXACT_TOL = _ATOL + 1e-5 * 1.0
+# The tracker triggers an exact-solve confirmation well before its own
+# (mathematically identical, numerically ~1e-12-apart) misfit estimate
+# reaches the solver tolerance, so tracker/solver disagreement can only
+# cost a spurious cheap confirm — never a missed decodable prefix.
+_TRIGGER_SLACK = 32.0
 
 
 class DecodeError(RuntimeError):
@@ -138,6 +149,144 @@ def best_effort_decode_vector(
     return DecodeOutcome(a=a, exact=exact, residual=residual, support=support)
 
 
+class DecodableSetTracker:
+    """Incremental "decodable yet?" over a growing available-worker set.
+
+    The arrival-driven control plane (DESIGN.md §7) asks, after every worker
+    completion, whether the live set can decode.  A fresh least-squares per
+    prefix is O(|A|·k²) each — O(m²k²) per iteration at large m.  The
+    tracker instead maintains an orthonormal basis of
+    ``span{B[i] : i ∈ A}`` (modified Gram-Schmidt with re-orthogonalization)
+    and the residual of the all-ones target against it, so each arrival is
+    one O(rank·k) update and
+
+    - ``residual``   — RMS best-effort misfit ``min_a ‖a·B[A] − 1‖₂/√k``,
+      identical (to fp noise) to ``best_effort_decode_vector``'s residual;
+    - ``maybe_decodable`` — a slack-widened trigger for the exact-solve
+      confirmation (see ``_TRIGGER_SLACK``): cheap to test every event,
+      never false-negative in practice;
+    - ``decodable``  — the solver's own exactness tolerance on the tracked
+      misfit, for standalone use.
+
+    The tracker answers *whether* a set decodes; the decode *vector* still
+    comes from the scheme's (LRU-cached) solver so coefficients stay
+    bit-identical with the non-streaming path.  Rows numerically inside the
+    current span (no rank growth) cannot change any answer and cost one
+    projection.
+    """
+
+    def __init__(self, B: np.ndarray, atol: float = _ATOL):
+        self.B = np.asarray(B, dtype=np.float64)
+        self.m, self.k = self.B.shape
+        self.atol = atol
+        self._basis = np.empty((min(self.m, self.k), self.k), dtype=np.float64)
+        self._rank = 0
+        self._misfit = np.ones(self.k, dtype=np.float64)  # 1 − proj_span(1)
+        self.available: list[int] = []
+
+    def add(self, worker: int) -> bool:
+        """Fold worker ``worker``'s row into the span; True iff rank grew."""
+        self.available.append(int(worker))
+        if self._rank >= self._basis.shape[0]:
+            return False  # span is already the full space
+        row = self.B[worker]
+        scale = float(np.linalg.norm(row))
+        if scale == 0.0:
+            return False  # empty allocation: contributes nothing
+        v = row.copy()
+        q = self._basis[: self._rank]
+        for _ in range(2):  # re-orthogonalize: keeps the basis stable
+            if self._rank:
+                v -= (q @ v) @ q
+        nv = float(np.linalg.norm(v))
+        if nv <= 1e-12 * scale:
+            return False  # row inside the current span
+        v /= nv
+        self._basis[self._rank] = v
+        self._rank += 1
+        self._misfit -= float(self._misfit @ v) * v
+        return True
+
+    @property
+    def rank(self) -> int:
+        return self._rank
+
+    @property
+    def max_misfit(self) -> float:
+        """Largest per-component misfit of the best fit to the ones vector."""
+        return float(np.abs(self._misfit).max()) if self.k else 0.0
+
+    @property
+    def residual(self) -> float:
+        """RMS best-effort residual ``‖a·B[A] − 1‖₂/√k`` of the live set."""
+        return float(np.linalg.norm(self._misfit) / np.sqrt(self.k))
+
+    @property
+    def decodable(self) -> bool:
+        """Exactness at the solver's own tolerance (per-component)."""
+        return self.max_misfit <= _EXACT_TOL
+
+    @property
+    def maybe_decodable(self) -> bool:
+        """Cheap trigger for an exact-solve confirmation (slack-widened)."""
+        return self.max_misfit <= _TRIGGER_SLACK * _EXACT_TOL
+
+
+def worker_arrival_order(
+    finish_times: Sequence[float], dead: Iterable[int] = ()
+) -> Iterable[tuple[float, int]]:
+    """(t, worker) worker-completion events in arrival order — the
+    whole-worker ArrivalStream a dense finish vector induces.  Stable order
+    on ties (worker index), dead/non-finite workers never emitted."""
+    finish_times = np.asarray(finish_times, dtype=np.float64)
+    dead = set(int(i) for i in dead)
+    for idx in np.argsort(finish_times, kind="stable"):
+        i = int(idx)
+        if i in dead or not np.isfinite(finish_times[i]):
+            continue
+        yield float(finish_times[i]), i
+
+
+def earliest_decodable_stream(
+    B: np.ndarray,
+    arrivals: Iterable[tuple[float, int]],
+    confirm,
+    fast_path=None,
+    atol: float = _ATOL,
+) -> tuple[float, tuple[int, ...]]:
+    """Streaming Eq. 3: consume ``(t, worker)`` completion events in arrival
+    order, answer "decodable yet?" incrementally, return (τ, used) at the
+    earliest decodable prefix.
+
+    ``confirm(live_tuple)`` is the scheme's exact solver: it returns the
+    decode vector ``a`` for the live set or ``None`` when the set only
+    decodes best-effort (it is invoked once per tracker trigger, not per
+    event — the O(rank·k) tracker answers everything else).
+    ``fast_path(frozenset)`` is the optional scheme shortcut (group
+    indicator), checked first exactly like the non-streaming path so the
+    two agree on (τ, used) bit-for-bit.
+    """
+    tracker = DecodableSetTracker(B, atol)
+    live: list[int] = []
+    times: dict[int, float] = {}
+    for t, w in arrivals:
+        w = int(w)
+        live.append(w)
+        times[w] = float(t)
+        a = fast_path(frozenset(live)) if fast_path is not None else None
+        if a is None:
+            tracker.add(w)
+            if not tracker.maybe_decodable:
+                continue
+            a = confirm(tuple(live))
+            if a is None:
+                continue
+        used = tuple(j for j in live if abs(a[j]) > 1e-12)
+        tau = max((times[j] for j in used), default=0.0)
+        return float(tau), used
+    raise DecodeError("no decodable set among finished workers")
+
+
 def earliest_decodable_prefix(
     decode_vector, finish_times: Sequence[float], dead: Iterable[int] = ()
 ) -> tuple[float, tuple[int, ...]]:
@@ -202,7 +351,29 @@ class Decoder:
         except DecodeError:
             return False
 
+    def _group_fast_path(self, avail: frozenset[int]) -> np.ndarray | None:
+        for group in self.scheme.groups:
+            if avail.issuperset(group):
+                a = np.zeros(self.scheme.m, dtype=np.float64)
+                a[list(group)] = 1.0
+                return a
+        return None
+
+    def _confirm_exact(self, live: tuple[int, ...]) -> np.ndarray | None:
+        try:
+            return self._solve(frozenset(live))
+        except DecodeError:
+            return None
+
     def earliest_decodable(
         self, finish_times: Sequence[float], dead: Iterable[int] = ()
     ) -> tuple[float, tuple[int, ...]]:
-        return earliest_decodable_prefix(self.decode_vector, finish_times, dead)
+        """Streaming Eq. 3 over the induced worker-arrival order: the
+        incremental tracker answers "decodable yet?" per event, the cached
+        solver is consulted once at the decodable moment."""
+        return earliest_decodable_stream(
+            self.scheme.B,
+            worker_arrival_order(finish_times, dead),
+            confirm=self._confirm_exact,
+            fast_path=self._group_fast_path,
+        )

@@ -22,6 +22,7 @@ square.  Property-tested by exhaustive Condition-1 enumeration.
 
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -29,7 +30,32 @@ import numpy as np
 from repro.core.allocation import Allocation, allocate
 from repro.core.coding import CodingScheme, _build_from_support
 
-__all__ = ["find_all_groups", "prune_groups", "build_group_based"]
+__all__ = [
+    "GroupSearchResult",
+    "find_all_groups",
+    "find_greedy_groups",
+    "prune_groups",
+    "build_group_based",
+    "GREEDY_GROUP_THRESHOLD",
+]
+
+# Above this worker count Alg. 2's exact-cover enumeration is replaced by the
+# O(m·k) greedy arc-chaining cover — the exponential recursion stops being
+# even startable long before m=256.
+GREEDY_GROUP_THRESHOLD = 24
+
+
+class GroupSearchResult(list):
+    """Group list + search diagnostics.
+
+    A plain ``list`` everywhere it matters, with a ``truncated`` flag so a
+    degraded cover (enumeration stopped at ``max_groups``) is diagnosable
+    by callers instead of silently shrinking the pruned candidate pool.
+    """
+
+    def __init__(self, groups=(), truncated: bool = False):
+        super().__init__(groups)
+        self.truncated = bool(truncated)
 
 
 def _bitmask(parts: Sequence[int]) -> int:
@@ -39,12 +65,17 @@ def _bitmask(parts: Sequence[int]) -> int:
     return mask
 
 
-def find_all_groups(alloc: Allocation, max_groups: int = 20000) -> list[tuple[int, ...]]:
+def find_all_groups(alloc: Allocation, max_groups: int = 20000) -> GroupSearchResult:
     """Alg. 2 FindAllGroups: every worker set tiling the dataset exactly.
 
     Exact-cover enumeration with canonical ordering (always extend via the
     lowest uncovered partition) so each group is produced exactly once.
     Partition sets are bitmasks; workers with empty assignment are skipped.
+
+    Returns a :class:`GroupSearchResult`; when the enumeration is cut off at
+    ``max_groups`` the result's ``truncated`` flag is set and a RuntimeWarning
+    is emitted — downstream pruning then sees only a partial candidate pool,
+    which can weaken the final disjoint cover.
     """
     full = (1 << alloc.k) - 1
     masks = [_bitmask(ps) for ps in alloc.partitions]
@@ -55,9 +86,12 @@ def find_all_groups(alloc: Allocation, max_groups: int = 20000) -> list[tuple[in
             by_part[p].append(w)
 
     out: list[tuple[int, ...]] = []
+    truncated = False
 
     def rec(remaining: int, chosen: list[int]) -> None:
+        nonlocal truncated
         if len(out) >= max_groups:
+            truncated = True
             return
         if remaining == 0:
             out.append(tuple(sorted(chosen)))
@@ -72,7 +106,79 @@ def find_all_groups(alloc: Allocation, max_groups: int = 20000) -> list[tuple[in
             chosen.pop()
 
     rec(full, [])
-    return out
+    if truncated:
+        warnings.warn(
+            f"find_all_groups stopped at max_groups={max_groups} "
+            f"(m={alloc.m}, k={alloc.k}); the group cover is built from a "
+            "truncated candidate pool",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    return GroupSearchResult(out, truncated=truncated)
+
+
+def find_greedy_groups(alloc: Allocation, max_groups: int | None = None) -> GroupSearchResult:
+    """O(m·k) greedy disjoint group cover for large m.
+
+    Exploits the Eq. 6 structure: every worker covers a contiguous arc of
+    the partition circle, so a group is a chain of arcs that closes exactly
+    after one lap.  Greedy chaining — from each candidate origin, repeatedly
+    take the longest unused arc starting where the previous one ended —
+    finds pairwise-disjoint tilings directly (no enumeration + prune), at
+    the cost of possibly fewer groups than exhaustive search; Alg. 3
+    degrades gracefully (Ē is coded at s−P for whatever P materializes).
+
+    Workers whose partition set is not a contiguous arc never extend a
+    chain (their mask won't match any start), so the function is safe — not
+    just fast — on arbitrary allocations: it finds what chains exist.
+    """
+    k = alloc.k
+    cap = alloc.s + 1 if max_groups is None else int(max_groups)
+    # arc view: start + length of each worker's assignment (allocation order)
+    arcs: dict[int, list[int]] = {}  # start partition -> workers, longest first
+    length = {}
+    for w, parts in enumerate(alloc.partitions):
+        n = len(parts)
+        if n == 0:
+            continue
+        start = parts[0]
+        # verify contiguity mod k (cyclic assignment guarantees it; foreign
+        # allocations may not)
+        if any(parts[i] != (start + i) % k for i in range(n)):
+            continue
+        arcs.setdefault(start, []).append(w)
+        length[w] = n
+    for ws in arcs.values():
+        ws.sort(key=lambda w: -length[w])
+
+    used: set[int] = set()
+    out: list[tuple[int, ...]] = []
+    origins = sorted(arcs)
+    for origin in origins:
+        while len(out) < cap:
+            chain: list[int] = []
+            pos, covered = origin, 0
+            ok = False
+            while True:
+                cand = [w for w in arcs.get(pos, ()) if w not in used and w not in chain]
+                if not cand:
+                    break
+                w = cand[0]  # longest-first: fewest workers per group
+                chain.append(w)
+                covered += length[w]
+                pos = (pos + length[w]) % k
+                if covered == k and pos == origin:
+                    ok = True
+                    break
+                if covered > k:
+                    break
+            if not ok:
+                break
+            used.update(chain)
+            out.append(tuple(sorted(chain)))
+        if len(out) >= cap:
+            break
+    return GroupSearchResult(out, truncated=False)
 
 
 def prune_groups(groups: Sequence[tuple[int, ...]]) -> list[tuple[int, ...]]:
@@ -97,10 +203,18 @@ def build_group_based(
     k: int, s: int, c: Sequence[float], rng: np.random.Generator | int | None = 0,
     max_load: int | None = None,
 ) -> CodingScheme:
-    """Alg. 3: group rows are 0/1 indicators; Ē coded via Alg. 1 at s−P."""
+    """Alg. 3: group rows are 0/1 indicators; Ē coded via Alg. 1 at s−P.
+
+    Exhaustive Alg. 2 enumeration + pruning up to
+    :data:`GREEDY_GROUP_THRESHOLD` workers (bit-identical to the paper's
+    construction at paper scale); the greedy arc-chaining cover beyond it.
+    """
     rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
     alloc = allocate(k, s, c, max_load)
-    groups = prune_groups(find_all_groups(alloc))
+    if alloc.m > GREEDY_GROUP_THRESHOLD:
+        groups = list(find_greedy_groups(alloc))
+    else:
+        groups = prune_groups(find_all_groups(alloc))
     # More than s+1 disjoint groups cannot exist (each holds one copy of each
     # partition and only s+1 copies exist); keep at most s+1 deterministically.
     groups = sorted(groups, key=len)[: s + 1]

@@ -27,6 +27,7 @@ five built-ins).
 from __future__ import annotations
 
 import abc
+import copy
 import importlib
 import math
 from functools import lru_cache
@@ -39,7 +40,8 @@ from repro.core.decoding import (
     DecodeError,
     DecodeOutcome,
     best_effort_decode_vector,
-    earliest_decodable_prefix,
+    earliest_decodable_stream,
+    worker_arrival_order,
 )
 
 __all__ = [
@@ -158,7 +160,7 @@ class GradientCode(abc.ABC):
         if c.shape != (m,):
             raise ValueError(f"len(c)={c.shape[0] if c.ndim else '?'} != m={m}")
         self.c = c
-        self.scheme: CodingScheme = self.build(c)
+        self.scheme: CodingScheme = self._build_tracked(c)
         self._reset_decode_cache()
 
     # -- construction ------------------------------------------------------
@@ -166,6 +168,13 @@ class GradientCode(abc.ABC):
     @abc.abstractmethod
     def build(self, c: np.ndarray) -> CodingScheme:
         """Construct the encoding matrix/allocation for throughputs ``c``."""
+
+    def _build_tracked(self, c: np.ndarray) -> CodingScheme:
+        """`build` + a snapshot of the pre-build RNG state, so a checkpoint
+        restore can replay the exact same construction (the RNG is consumed
+        only by builds, so replaying the last build realigns it)."""
+        self._build_rng_state = copy.deepcopy(self._rng.bit_generator.state)
+        return self.build(c)
 
     def rebalance(self, c: Sequence[float]) -> CodingScheme:
         """Elastic re-encode: rebuild B from fresh throughput estimates.
@@ -180,9 +189,27 @@ class GradientCode(abc.ABC):
         if c.shape != (self.m,):
             raise ValueError(f"rebalance c shape {c.shape} != ({self.m},)")
         self.c = c
-        self.scheme = self.build(c)
+        self.scheme = self._build_tracked(c)
         self._reset_decode_cache()
         return self.scheme
+
+    # -- checkpoint state ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able construction state: the applied throughputs + the RNG
+        state the current B was drawn from.  ``load_state_dict`` replays the
+        build, reproducing B bit-for-bit AND leaving the RNG exactly where
+        the saved run's was (builds are the only RNG consumer)."""
+        return {
+            "c": [float(x) for x in self.c],
+            "build_rng_state": copy.deepcopy(self._build_rng_state),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.c = np.asarray(state["c"], dtype=np.float64)
+        self._rng.bit_generator.state = state["build_rng_state"]
+        self.scheme = self._build_tracked(self.c)
+        self._reset_decode_cache()
 
     # -- convenient views --------------------------------------------------
 
@@ -263,12 +290,41 @@ class GradientCode(abc.ABC):
     def is_decodable(self, available: Iterable[int]) -> bool:
         return self.decode_outcome(available).exact
 
+    def _confirm_exact(self, live: tuple[int, ...]) -> np.ndarray | None:
+        """Exact-solve confirmation for the streaming tracker: the cached
+        outcome's vector when the live set decodes exactly, else None."""
+        outcome = self._solve(frozenset(live))
+        return outcome.a if outcome.exact else None
+
     def earliest_decodable(
         self, finish_times: Sequence[float], dead: Iterable[int] = ()
     ) -> tuple[float, tuple[int, ...]]:
         """Smallest time τ at which the set of finished workers decodes
-        (Eq. 3), honouring this scheme's decode fast path."""
-        return earliest_decodable_prefix(self.decode_vector, finish_times, dead)
+        (Eq. 3), honouring this scheme's decode fast path.
+
+        Arrival-driven: the finish vector induces a worker-completion
+        stream, a :class:`~repro.core.decoding.DecodableSetTracker` answers
+        "decodable yet?" per event in O(rank·k), and the (LRU-cached) exact
+        solver runs once at the decodable moment — not per prefix."""
+        return earliest_decodable_stream(
+            self.scheme.B,
+            worker_arrival_order(finish_times, dead),
+            confirm=self._confirm_exact,
+            fast_path=self._decode_fast_path,
+        )
+
+    def earliest_decodable_stream(
+        self, arrivals: Iterable[tuple[float, int]]
+    ) -> tuple[float, tuple[int, ...]]:
+        """Streaming variant: consume (t, worker) completion events directly
+        (an :class:`~repro.core.simulator.ArrivalStream` view) without ever
+        materializing a dense finish vector."""
+        return earliest_decodable_stream(
+            self.scheme.B,
+            arrivals,
+            confirm=self._confirm_exact,
+            fast_path=self._decode_fast_path,
+        )
 
     # -- misc --------------------------------------------------------------
 

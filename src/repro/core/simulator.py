@@ -16,6 +16,9 @@ concerns itself with clocks.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+from functools import cached_property
+from typing import Iterator, Protocol
 
 import numpy as np
 
@@ -24,12 +27,40 @@ from repro.core.decoding import DecodeError, Decoder
 from repro.core.straggler import StragglerModel, StragglerProfile
 
 __all__ = [
+    "ArrivalEvent",
+    "ArrivalStream",
     "IterationResult",
     "PartitionTimes",
     "RunResult",
     "ClusterSim",
     "theoretical_optimal_time",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent:
+    """One completion event in an iteration's arrival stream (DESIGN.md §7).
+
+    Attributes:
+      t: arrival instant (seconds into the iteration).
+      worker: reporting worker.
+      partition: the partition whose coded contribution just arrived, or
+        ``None`` for a whole-worker completion marker (emitted after the
+        worker's last partition — the event all-or-nothing decode consumes).
+    """
+
+    t: float
+    worker: int
+    partition: int | None
+
+
+class ArrivalStream(Protocol):
+    """Ordered iterator of completion events — what the arrival-driven
+    control plane consumes instead of a dense finish vector.  Events are
+    emitted in nondecreasing ``t``; consumers may stop early (the earliest
+    decodable moment usually arrives long before the stream ends)."""
+
+    def __iter__(self) -> Iterator[ArrivalEvent]: ...
 
 
 def theoretical_optimal_time(k: int, s: int, c: np.ndarray) -> float:
@@ -70,28 +101,76 @@ class PartitionTimes:
     m: int
     k: int
 
+    @cached_property
+    def _flat(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(workers, pids, times) of every per-partition arrival, one flat
+        vectorized view — support/work queries become single scatters."""
+        counts = np.array([t.size for t in self.times], dtype=np.int64)
+        workers = np.repeat(np.arange(self.m, dtype=np.int64), counts)
+        if counts.sum():
+            pids = np.concatenate(
+                [np.asarray(p, dtype=np.int64) for p, n in zip(self.partitions, counts) if n]
+            )
+            times = np.concatenate([t for t in self.times if t.size])
+        else:
+            pids = np.empty(0, dtype=np.int64)
+            times = np.empty(0, dtype=np.float64)
+        return workers, pids, times
+
     def support_at(self, tau: float) -> np.ndarray:
         """(m, k) effective-B completion mask: 1 where worker w's partition j
         result has arrived by τ.  Feeds ``decode_partial``."""
+        workers, pids, times = self._flat
         sup = np.zeros((self.m, self.k), dtype=np.float64)
-        for w, (t, pids) in enumerate(zip(self.times, self.partitions)):
-            done = [j for j, tj in zip(pids, t) if tj <= tau]
-            sup[w, done] = 1.0
+        # isfinite guard: a dead worker's arrivals are inf and must not count
+        # as done even at tau=inf (the exact-mode "no deadline" resolve)
+        done = np.isfinite(times) & (times <= tau)
+        sup[workers[done], pids[done]] = 1.0
         return sup
 
     def work_done_at(self, tau: float) -> np.ndarray:
         """(m,) partitions completed by τ per worker — the fractional-work
         observation the throughput estimator folds in mid-iteration."""
-        return np.array(
-            [float(np.count_nonzero(t <= tau)) for t in self.times], dtype=np.float64
-        )
+        workers, _, times = self._flat
+        done = np.isfinite(times) & (times <= tau)
+        return np.bincount(workers, weights=done.astype(np.float64), minlength=self.m)
 
     def event_times(self, deadline: float) -> np.ndarray:
         """Sorted unique arrival times ≤ deadline — the only instants where
         the decodable information set changes."""
-        all_t = np.concatenate([t for t in self.times if t.size] or [np.empty(0)])
+        all_t = self._flat[2]
         finite = all_t[np.isfinite(all_t)]
         return np.unique(finite[finite <= deadline])
+
+    def stream(self, deadline: float = np.inf) -> Iterator[ArrivalEvent]:
+        """ArrivalStream view: per-partition completions in nondecreasing t
+        (heap-merge of the per-worker sorted clocks — O(N log m), lazy), a
+        ``partition=None`` whole-worker marker right after each worker's
+        last arrival.  Events past ``deadline`` are never emitted."""
+        heads = []
+        for w, t in enumerate(self.times):
+            if t.size and np.isfinite(t[0]) and t[0] <= deadline:
+                heads.append((float(t[0]), w, 0))
+        heapq.heapify(heads)
+        while heads:
+            t, w, i = heapq.heappop(heads)
+            yield ArrivalEvent(t=t, worker=w, partition=int(self.partitions[w][i]))
+            nxt = i + 1
+            if nxt < self.times[w].size:
+                tn = float(self.times[w][nxt])
+                if np.isfinite(tn) and tn <= deadline:
+                    heapq.heappush(heads, (tn, w, nxt))
+                # a non-finite/late next arrival ends the worker's stream
+                # without a completion marker — it never fully finished
+            else:
+                yield ArrivalEvent(t=t, worker=w, partition=None)
+
+    def worker_stream(self, deadline: float = np.inf) -> Iterator[tuple[float, int]]:
+        """(t, worker) whole-worker completion events in arrival order —
+        the stream all-or-nothing decode paths consume."""
+        for ev in self.stream(deadline):
+            if ev.partition is None:
+                yield ev.t, ev.worker
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +260,14 @@ class ClusterSim:
             m=scheme.m,
             k=scheme.k,
         )
+
+    def arrival_stream(
+        self, profile: StragglerProfile, deadline: float = np.inf
+    ) -> Iterator[ArrivalEvent]:
+        """One iteration as an ordered completion-event stream (DESIGN.md
+        §7): per-partition arrivals + whole-worker markers, lazily merged —
+        the arrival-driven control plane's input, no dense finish vector."""
+        return self.partition_times(profile).stream(deadline)
 
     def iteration(self, profile: StragglerProfile) -> IterationResult:
         loads = self.loads  # one worker_load() scan per iteration

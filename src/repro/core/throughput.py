@@ -82,3 +82,17 @@ class ThroughputEstimator:
     def mark_applied(self) -> None:
         """Call after re-running allocation with the current estimate."""
         self._last_applied = self.normalized()
+
+    # -- checkpoint state ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-able estimator state: the EWMA plus the hysteresis
+        reference, so resumed runs keep the same rebalance decisions."""
+        return {
+            "c": [float(x) for x in self.c],
+            "last_applied": [float(x) for x in self._last_applied],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.c = np.asarray(state["c"], dtype=np.float64)
+        self._last_applied = np.asarray(state["last_applied"], dtype=np.float64)

@@ -1,24 +1,28 @@
 """ElasticController: throughput estimation + simulated cluster clock +
-the elastic re-encode policy (DESIGN.md §4), and — when a
-:class:`~repro.approx.DeadlinePolicy` is attached — the deadline-driven
-inexact stepping loop (DESIGN.md §5).
+the elastic re-encode policy (DESIGN.md §4), driving the ONE arrival-driven
+stepping loop (DESIGN.md §7) for exact and inexact semantics alike.
 
 Owns the pieces of the control loop that are about the CLUSTER rather than
-the model: the ClusterSim that turns straggler profiles into per-worker
-finish times (the paper's measured quantity), the EWMA ThroughputEstimator
-fed by those observations, and the hysteresis policy deciding when the
-codec should re-encode.  The trainer calls three methods per step:
-``tick`` / ``tick_deadline`` (clock), ``observe`` / ``observe_partial``
-(estimation), ``maybe_rebalance`` (policy).
+the model: the ClusterSim that turns straggler profiles into per-partition
+arrival clocks (the paper's measured quantity), the EWMA
+ThroughputEstimator fed by those observations, and the hysteresis policy
+deciding when the codec should re-encode.  The trainer calls three methods
+per step: ``tick`` (clock + policy resolution → :class:`StepTick`),
+``observe`` (estimation), ``maybe_rebalance`` (policy).
+
+There is no separate exact path: with no explicit policy the controller
+runs :meth:`DeadlinePolicy.exact` — ``exact_first`` at an infinite
+deadline — and the exact semantics (skip on undecodable, full finish-time
+observations) fall out of the same tick/observe pair.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.approx.deadline import DeadlinePolicy, DeadlineTick
+from repro.approx.deadline import DeadlinePolicy, StepTick
 from repro.core.codec import Codec
-from repro.core.simulator import ClusterSim, IterationResult
+from repro.core.simulator import ClusterSim
 from repro.core.straggler import StragglerProfile
 from repro.core.throughput import ThroughputEstimator
 
@@ -37,8 +41,8 @@ class ElasticController:
         (the paper's §V motivation) is reproducible.
       comm_time: per-worker result upload seconds (simulated).
       c_init: optional calibration prior for the estimator.
-      policy: optional deadline policy — attaching one enables the
-        deadline-driven inexact stepping loop (``tick_deadline``).
+      policy: stepping policy; None = :meth:`DeadlinePolicy.exact` (the
+        paper's exact semantics — same loop, infinite deadline).
     """
 
     def __init__(
@@ -52,7 +56,7 @@ class ElasticController:
     ):
         m = codec.m
         self.codec = codec
-        self.policy = policy
+        self.policy = policy if policy is not None else DeadlinePolicy.exact()
         self.true_speeds = (
             np.asarray(true_speeds, np.float64) if true_speeds is not None else np.ones(m)
         )
@@ -64,20 +68,30 @@ class ElasticController:
             wait_for_all=codec.code.wait_for_all,
         )
 
-    def tick(self, profile: StragglerProfile) -> IterationResult:
-        """Simulate one BSP iteration's clock for a straggler profile."""
-        return self.sim.iteration(profile)
-
-    def tick_deadline(self, profile: StragglerProfile) -> DeadlineTick:
-        """Deadline-mode iteration: per-partition clocks, an EWMA-adapted
-        deadline, and the policy's (step time, decode outcome) choice."""
-        if self.policy is None:
-            raise RuntimeError("tick_deadline requires a DeadlinePolicy")
+    def tick(self, profile: StragglerProfile) -> StepTick:
+        """One control-plane iteration: per-partition arrival clocks → the
+        policy's (τ, outcome) choice → the observation plan.  Exact mode is
+        the same resolution at an infinite deadline."""
         code = self.codec.code
+        policy = self.policy
         ptimes = self.sim.partition_times(profile)
-        deadline = self.policy.deadline_for(code, self.estimator.c, self.sim.comm_time)
-        tau, outcome = self.policy.resolve(code, ptimes, deadline)
+        deadline = policy.deadline_for(code, self.estimator.c, self.sim.comm_time)
+        tau, outcome, used = policy.resolve(code, ptimes, deadline)
         loads = code.worker_load().astype(np.float64)
+        m = code.m
+
+        if not policy.step_inexact:
+            # exact semantics: every worker's true finish time is known once
+            # the iteration completes, so the observation is the full finish
+            # vector (folded only when the iteration actually steps)
+            return StepTick(
+                T=float(tau), deadline=float(deadline), outcome=outcome,
+                ptimes=ptimes,
+                n_used=len(used) if used is not None else outcome.n_used,
+                work_done=loads, censored=np.zeros(m, dtype=bool),
+                observe_full=True,
+            )
+
         finished = np.isfinite(ptimes.finish) & (ptimes.finish <= tau)
         if code.reports_partial_work:
             work = ptimes.work_done_at(float(tau))
@@ -94,26 +108,28 @@ class ElasticController:
             # bound load/τ it provably failed to beat.
             work = loads
             censored = (loads > 0) & ~finished
-        return DeadlineTick(
+        return StepTick(
             T=float(tau), deadline=float(deadline), outcome=outcome,
-            ptimes=ptimes, work_done=work, censored=censored,
+            ptimes=ptimes, n_used=outcome.n_used,
+            work_done=work, censored=censored, observe_full=False,
         )
 
-    def observe(self, finish_times: np.ndarray) -> None:
-        """Fold observed per-worker finish times into the EWMA estimate
-        (full stragglers — inf/nan — are not folded in)."""
-        self.estimator.update(finish_times, self.codec.code.worker_load())
+    def observe(self, tick: StepTick) -> None:
+        """Fold one tick's observation into the EWMA estimate.
 
-    def observe_partial(self, tick: DeadlineTick) -> None:
-        """Fold a deadline iteration's completion observation in: worker i
-        did ``work_done[i]`` partitions in ``min(T, finish_i)`` seconds
-        (finishing early must not read as slowness).  Censored entries are
-        upper BOUNDS (c_i ≤ work/τ): informative only when they undercut the
-        current estimate, so they are capped at it — an overestimated worker
-        is pulled down toward the bound, a correctly-estimated one is left
-        alone.  Unlike the exact path's ``observe``, a worker dead *this*
-        iteration is indistinguishable from a slow one here, and the bound
-        is still true for it."""
+        Exact mode (``observe_full``): the full finish-time vector against
+        the whole-worker loads — but only when the iteration stepped (an
+        undecodable exact iteration is skipped wholesale, clock included).
+        Deadline mode: worker i did ``work_done[i]`` partitions in
+        ``min(T, finish_i)`` seconds (finishing early must not read as
+        slowness).  Censored entries are upper BOUNDS (c_i ≤ work/τ):
+        informative only when they undercut the current estimate, so they
+        are capped at it — an overestimated worker is pulled down toward
+        the bound, a correctly-estimated one is left alone."""
+        if tick.observe_full:
+            if tick.outcome.exact:
+                self.estimator.update(tick.ptimes.finish, self.codec.code.worker_load())
+            return
         finish = tick.ptimes.finish
         elapsed = np.where(np.isfinite(finish) & (finish <= tick.T), finish, tick.T)
         work = np.where(
@@ -135,3 +151,11 @@ class ElasticController:
         self.codec.rebalance(self.estimator.normalized())
         self.estimator.mark_applied()
         return True
+
+    # -- checkpoint state ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"estimator": self.estimator.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.estimator.load_state_dict(state["estimator"])

@@ -27,9 +27,10 @@ partitions identically in every backend: fused/spmd via slot weights,
 reference via masked B rows.
 
 Device residency contract: the plan tensors (``slot_pids`` / ``slot_coeff``
-/ ``slot_mask``) are uploaded once per codec ``version`` and cached on
-device; elastic rebalances bump the version and the next step re-uploads —
-nothing else ever re-materializes them.  ``host_pack=True`` preserves the
+/ ``slot_mask``) are uploaded once per plan *object* and cached on device;
+every value-changing path (elastic rebalance, checkpoint restore) rebuilds
+the plan, so the next step re-uploads — nothing else ever re-materializes
+them.  ``host_pack=True`` preserves the
 pre-§6 host-side numpy pack (oracle for equivalence tests and the
 ``benchmarks/steptime.py`` before/after comparison).
 """
@@ -113,8 +114,11 @@ class StepEngine:
         # used to re-trace the whole model every step
         self._vg = jax.value_and_grad(model.weighted_loss)
 
-        # device-resident plan cache, keyed by codec.version (DESIGN.md §6)
-        self._plan_version = -1
+        # device-resident plan cache, keyed by plan object IDENTITY: every
+        # path that changes plan values (rebalance, checkpoint restore)
+        # rebuilds the plan object, so identity can never go stale the way
+        # an externally-restored version counter could (DESIGN.md §6)
+        self._plan_ref = None
         self._dev_pids: jnp.ndarray | None = None  # (m, n_slots) int32
         self._dev_coeff: jnp.ndarray | None = None  # (m, n_slots) f32
         self._dev_mask: jnp.ndarray | None = None  # (m, n_slots) f32
@@ -175,18 +179,18 @@ class StepEngine:
     def _device_plan(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """(slot_pids, slot_coeff, slot_mask) as cached device arrays.
 
-        Uploaded once per codec version; an elastic ``rebalance`` bumps the
-        version, so the next step pays ONE (m, n_slots)-sized upload and the
-        steady-state host→device traffic is just the unique batch + the
-        (m,)/(m,k) decode inputs.
+        Uploaded once per plan object; a rebalance (or checkpoint restore)
+        rebuilds the plan, so the next step pays ONE (m, n_slots)-sized
+        upload and the steady-state host→device traffic is just the unique
+        batch + the (m,)/(m,k) decode inputs.
         """
-        if self._plan_version != self.codec.version:
-            plan = self.codec.plan
+        plan = self.codec.plan
+        if self._plan_ref is not plan:
             self._dev_pids = jnp.asarray(plan.slot_pids)
             self._dev_coeff = jnp.asarray(plan.slot_coeff)
             self._dev_mask = jnp.asarray(plan.slot_mask)
             self._dev_coeff_mask = jnp.asarray(plan.slot_coeff * plan.slot_mask)
-            self._plan_version = self.codec.version
+            self._plan_ref = plan
         return self._dev_pids, self._dev_coeff, self._dev_mask
 
     def _support_dev(self, support: np.ndarray | None) -> jnp.ndarray:

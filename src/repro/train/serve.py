@@ -37,10 +37,13 @@ class LMServer:
         S = batch["tokens"].shape[1] if "tokens" in batch else batch["frames"].shape[1]
         cache_len = cache_len or (S + max_new_tokens)
         logits, cache = self._prefill(params, batch, cache_len=cache_len)
+        # accumulate tokens ON DEVICE: a np.asarray per decoded token would
+        # force a blocking host sync each step, serializing the async decode
+        # dispatch; one stacked transfer at the end keeps the loop enqueued
         outs = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         for _ in range(max_new_tokens):
-            outs.append(np.asarray(tok[:, 0]))
+            outs.append(tok[:, 0])
             logits, cache = self._decode(params, tok, cache)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return np.stack(outs, axis=1)
+        return np.asarray(jnp.stack(outs, axis=1))

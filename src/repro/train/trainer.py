@@ -10,18 +10,17 @@
   - :class:`~repro.train.elastic.ElasticController` — simulated cluster
     clock, EWMA throughput estimation, elastic re-encode policy.
 
-Per-step protocol (paper §III-A mapped to SPMD, see DESIGN.md §3):
-sample/observe the straggler pattern → exclude workers past the deadline →
-decode vector for the available set → one engine step (fused: a single
-jitted fwd/bwd + AdamW; elastic re-encodes only ever change tensor
-*values*, never shapes) → fold observed times into the throughput estimate
-and re-encode when it drifts.
-
-With a ``deadline_policy`` (DESIGN.md §5) the step instead runs the
-inexact loop: per-partition clocks → policy picks (τ, DecodeOutcome) →
-the engine steps with whatever arrived (possibly best-effort/partial) →
-fractional-completion observations feed the estimator.  Step metrics gain
-``decode_residual`` / ``exact`` / ``exact_fraction`` in both modes.
+ONE step path (DESIGN.md §7): every step is arrival-driven — the
+controller's tick resolves the iteration's per-partition arrival clocks
+through the stepping policy into (τ, DecodeOutcome, observation), the
+engine steps with whatever decoded, the observation feeds the estimator.
+The paper's exact semantics are not a second loop: with no explicit
+``deadline_policy`` the controller runs ``DeadlinePolicy.exact()``
+(``exact_first`` at an infinite deadline, inexact outcomes skipped), and
+the identical code path reproduces the pre-§7 exact trainer bit-for-bit
+(property-tested).  Step metrics carry ``decode_residual`` / ``exact`` /
+``exact_fraction`` in both modes; ``deadline`` appears whenever it is
+finite.
 
 Timing: on this CPU container wall-clock heterogeneity cannot be measured,
 so the controller's ClusterSim models per-worker clocks from the same
@@ -31,6 +30,7 @@ paper's "avg time per iteration".
 
 from __future__ import annotations
 
+import copy
 from typing import Callable
 
 import jax
@@ -46,6 +46,8 @@ from repro.train.engine import StepEngine, TrainerState
 from repro.train.prefetch import DevicePrefetcher
 
 __all__ = ["CodedTrainer", "TrainerState"]
+
+_SKIP_METRICS = {"loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan")}
 
 
 class CodedTrainer:
@@ -139,93 +141,76 @@ class CodedTrainer:
         self, state: TrainerState, partition_batch: dict[str, np.ndarray],
         profile: StragglerProfile | None = None,
     ) -> tuple[TrainerState, dict[str, float]]:
+        """One arrival-driven BSP step — exact or deadline semantics are
+        the policy's choice, not a separate code path."""
         if profile is None:
             profile = self.straggler_model.sample(self.m, self._rng)
-        if self.elastic.policy is not None:
-            return self._step_deadline(state, partition_batch, profile)
 
-        # --- timing model (what the paper measures) ---
-        itres = self.elastic.tick(profile)
-        finish = itres.finish
-        decode_ok = bool(np.isfinite(itres.T))
-        if decode_ok:
-            available = sorted(itres.used)
-        else:
-            # >s stragglers and no decodable set: BSP must wait for everyone
-            # still alive (paper's naive fallback); dead workers excluded.
-            available = [i for i in range(self.m) if np.isfinite(finish[i])]
-        self._steps_taken += 1
-        outcome = self.codec.decode_outcome(available)
-        if not outcome.exact:
-            # cannot decode exactly (e.g. naive + fault): skip the update;
-            # full metric key set so consumers can log unconditionally
-            return state, {
-                "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
-                "skipped": 1.0, "sim_iter_time": float("inf"),
-                "n_stragglers": float(len(profile.straggler_set())),
-                "n_used": 0.0,
-                "decode_residual": outcome.residual, "exact": 0.0,
-                "exact_fraction": self._exact_fraction(),
-            }
-        self._exact_steps += 1
-
-        new_state, metrics = self.engine.step(state, partition_batch, outcome.a)
-
-        # --- throughput estimation + elastic re-encode ---
-        self.elastic.observe(finish)
-        out = {
-            **metrics,
-            "sim_iter_time": float(itres.T) if decode_ok
-            else float(np.max(finish[available])) if available else float("inf"),
-            "n_stragglers": float(len(profile.straggler_set())),
-            "n_used": float(len(available)),
-            "skipped": 0.0,
-            "decode_residual": 0.0, "exact": 1.0,
-            "exact_fraction": self._exact_fraction(),
-        }
-        if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
-            out["rebalanced"] = 1.0
-        return new_state, out
-
-    def _step_deadline(
-        self, state: TrainerState, partition_batch: dict[str, np.ndarray],
-        profile: StragglerProfile,
-    ) -> tuple[TrainerState, dict[str, float]]:
-        """Deadline-driven inexact step (DESIGN.md §5): always steps, with
-        whatever decodes by the policy's chosen instant."""
-        tick = self.elastic.tick_deadline(profile)
+        # --- timing model + decode resolution (what the paper measures) ---
+        tick = self.elastic.tick(profile)
         outcome = tick.outcome
         self._steps_taken += 1
         self._exact_steps += int(outcome.exact)
-        if outcome.n_used == 0:
-            # nothing decodable arrived by the deadline: an optimizer step on
-            # the all-zero gradient would still weight-decay the params and
-            # advance the LR schedule — skip, like the exact path's skip, but
-            # the clock is paid and any observations still count
-            self.elastic.observe_partial(tick)
+
+        base = {
+            "sim_iter_time": tick.T,
+            "n_stragglers": float(len(profile.straggler_set())),
+            "decode_residual": outcome.residual,
+            "exact": float(outcome.exact),
+        }
+        if np.isfinite(tick.deadline):
+            base["deadline"] = tick.deadline
+
+        step_it = outcome.n_used > 0 and (
+            outcome.exact or self.elastic.policy.step_inexact
+        )
+        if not step_it:
+            # exact mode: cannot decode exactly (e.g. naive + fault).
+            # deadline mode: nothing decodable arrived — an optimizer step
+            # on the all-zero gradient would still weight-decay the params
+            # and advance the LR schedule.  Either way: skip the update;
+            # the clock is paid, and whatever observations the mode allows
+            # still count.  Full metric key set so consumers can log
+            # unconditionally.
+            self.elastic.observe(tick)
             return state, {
-                "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
-                "skipped": 1.0, "sim_iter_time": tick.T, "deadline": tick.deadline,
-                "n_stragglers": float(len(profile.straggler_set())),
-                "n_used": 0.0,
-                "decode_residual": outcome.residual, "exact": 0.0,
+                **_SKIP_METRICS, "skipped": 1.0, **base, "n_used": 0.0,
                 "exact_fraction": self._exact_fraction(),
             }
 
         new_state, metrics = self.engine.step(state, partition_batch, outcome)
 
-        self.elastic.observe_partial(tick)
+        # --- throughput estimation + elastic re-encode ---
+        self.elastic.observe(tick)
         out = {
-            **metrics,
-            "sim_iter_time": tick.T,
-            "deadline": tick.deadline,
-            "n_stragglers": float(len(profile.straggler_set())),
-            "n_used": float(outcome.n_used),
+            **metrics, **base,
+            "n_used": float(tick.n_used),
             "skipped": 0.0,
-            "decode_residual": outcome.residual,
-            "exact": float(outcome.exact),
             "exact_fraction": self._exact_fraction(),
         }
         if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
             out["rebalanced"] = 1.0
         return new_state, out
+
+    # -- checkpoint extras ---------------------------------------------------
+
+    def state_extras(self) -> dict:
+        """JSON-able control-plane state beyond (params, opt): straggler
+        RNG, step counters, throughput-estimator state, and the codec's
+        construction state (applied c + build RNG).  Restoring it makes
+        train-N-straight and train-k/save/load/train-(N−k) bit-identical —
+        elastic rebalances included (tests/test_resume.py)."""
+        return {
+            "steps_taken": self._steps_taken,
+            "exact_steps": self._exact_steps,
+            "trainer_rng_state": copy.deepcopy(self._rng.bit_generator.state),
+            "elastic": self.elastic.state_dict(),
+            "codec": self.codec.state_dict(),
+        }
+
+    def load_state_extras(self, extras: dict) -> None:
+        self._steps_taken = int(extras["steps_taken"])
+        self._exact_steps = int(extras["exact_steps"])
+        self._rng.bit_generator.state = extras["trainer_rng_state"]
+        self.elastic.load_state_dict(extras["elastic"])
+        self.codec.load_state_dict(extras["codec"])

@@ -225,16 +225,16 @@ def test_deadline_modes_order_and_outcomes():
 
     exact_first = DeadlinePolicy(mode="exact_first", slack=50.0)
     dl = exact_first.deadline_for(code, c_est, 0.01)
-    t_exact, o_exact = exact_first.resolve(code, pt, dl)
+    t_exact, o_exact, used_exact = exact_first.resolve(code, pt, dl)
     assert o_exact.exact
 
     bounded = DeadlinePolicy(mode="bounded_residual", target_residual=0.5, slack=50.0)
-    t_bound, o_bound = bounded.resolve(code, pt, dl)
+    t_bound, o_bound, _ = bounded.resolve(code, pt, dl)
     assert t_bound <= t_exact
     assert o_bound.exact or o_bound.residual <= 0.5
 
     fixed = DeadlinePolicy(mode="fixed_deadline", deadline_s=0.5)
-    t_fix, _ = fixed.resolve(code, pt, fixed.deadline_for(code, c_est, 0.01))
+    t_fix, _, _ = fixed.resolve(code, pt, fixed.deadline_for(code, c_est, 0.01))
     assert t_fix == pytest.approx(0.5)
 
 
@@ -270,7 +270,7 @@ def test_bounded_residual_steps_at_first_qualifying_event(seed):
     pt = sim.partition_times(prof)
     pol = DeadlinePolicy(mode="bounded_residual", target_residual=0.3, slack=2.0)
     deadline = pol.deadline_for(code, np.asarray(_C4), 0.01)
-    tau, out = pol.resolve(code, pt, deadline)
+    tau, out, _ = pol.resolve(code, pt, deadline)
 
     def qualifies(t):
         o = pol._outcome_at(code, pt, float(t))
@@ -398,7 +398,7 @@ def test_deadline_observation_respects_reporting_contract():
             codec, true_speeds=np.asarray(_C4), comm_time=0.01,
             policy=DeadlinePolicy(mode="fixed_deadline", deadline_s=4.0),
         )
-        tick = ctrl.tick_deadline(prof)
+        tick = ctrl.tick(prof)
         loads = codec.code.worker_load().astype(float)
         raw = tick.ptimes.work_done_at(tick.T)
         assert raw[0] == 0.0  # the delayed worker really reported nothing
@@ -414,12 +414,12 @@ def test_deadline_observation_respects_reporting_contract():
             np.testing.assert_array_equal(tick.work_done, loads)
         # a censored bound BELOW the prior corrects the overestimate...
         c_before = ctrl.estimator.c.copy()
-        ctrl.observe_partial(tick)
+        ctrl.observe(tick)
         assert ctrl.estimator.c[0] < c_before[0]
         # ...and one above the prior must not raise it
         ctrl.estimator.c[:] = 1e-3
         before = ctrl.estimator.c.copy()
-        ctrl.observe_partial(tick)
+        ctrl.observe(tick)
         assert ctrl.estimator.c[0] <= before[0] + 1e-12
 
 

@@ -167,12 +167,14 @@ def test_plan_cache_invalidated_on_rebalance():
     params = model.init(jax.random.PRNGKey(0))
     pb = _partition_batch(codec.k)
     eng.gradients(params, pb, codec.decode_vector(range(codec.m)))
-    v0 = eng._plan_version
+    plan0, v0 = eng._plan_ref, codec.version
+    assert plan0 is codec.plan
     codec.rebalance([4.0, 1.0, 1.0, 4.0])
     assert codec.version == v0 + 1
+    assert codec.plan is not plan0  # value change => new plan identity
     a = codec.decode_vector(range(codec.m))
     g_new = eng.gradients(params, pb, a)
-    assert eng._plan_version == codec.version
+    assert eng._plan_ref is codec.plan
     g_host = StepEngine(model, TrainConfig(), codec, backend="fused", host_pack=True).gradients(
         params, pb, a
     )

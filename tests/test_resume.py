@@ -1,0 +1,174 @@
+"""Checkpoint → ``CodedTrainer.run`` resume equivalence (satellite of the
+§7 refactor): training N steps straight must equal train-k / save / load /
+train-(N−k) BIT-FOR-BIT — including the elastic-rebalance state (estimator
+EWMA + hysteresis reference, the codec's re-encoded B, ``Codec.version``)
+and the straggler-RNG stream.  ``CodedTrainer.state_extras()`` /
+``load_state_extras()`` carry everything beyond (params, opt); the
+checkpoint layer stores them as the (JSON) manifest meta.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core.straggler import TransientStragglers
+from repro.train.engine import TrainerState
+from repro.train.trainer import CodedTrainer
+
+
+class _ToyModel:
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32),
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+class _Data:
+    """batch(step) source — deterministic by step, like SyntheticData."""
+
+    def __init__(self, k, mb=2, d=4):
+        self.k, self.mb, self.d = k, mb, d
+
+    def batch(self, step):
+        r = np.random.default_rng(7000 + step)
+        return {
+            "x": r.normal(size=(self.k, self.mb, self.d)).astype(np.float32),
+            "y": r.normal(size=(self.k, self.mb)).astype(np.float32),
+        }
+
+
+def _mk_trainer(scheme="heter_aware", seed=3):
+    # rebalance_every=2 + heterogeneous truth vs uniform prior: the EWMA
+    # drifts fast and the run re-encodes B mid-flight — the state a naive
+    # (params, opt)-only resume would lose
+    coding = CodingConfig(scheme=scheme, s=1, rebalance_every=2)
+    tc = TrainConfig(lr=1e-2, warmup_steps=2, total_steps=16)
+    return CodedTrainer(
+        _ToyModel(), coding, tc, m=4, part_mb=2,
+        straggler_model=TransientStragglers(p=0.3),
+        true_speeds=np.array([1.0, 1.0, 4.0, 4.0]),
+        comm_time=0.01, rng=seed,
+    )
+
+
+def _run(tr, state, steps, start=0):
+    data = _Data(tr.k)
+    state, metrics = tr.run(state, data, steps, start=start)
+    return state, metrics
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("split", [3, 5])
+def test_resume_bitmatches_straight_run(tmp_path, split):
+    N = 8
+    # --- straight run ---
+    tr_a = _mk_trainer()
+    s_a = tr_a.init_state(jax.random.PRNGKey(0))
+    s_a, _ = _run(tr_a, s_a, N)
+    assert tr_a.codec.version > 0  # a rebalance really happened
+
+    # --- train split steps, checkpoint, restart in a FRESH trainer ---
+    tr_b = _mk_trainer()
+    s_b = tr_b.init_state(jax.random.PRNGKey(0))
+    s_b, _ = _run(tr_b, s_b, split)
+    save_checkpoint(
+        str(tmp_path), split, {"params": s_b.params, "opt": s_b.opt},
+        meta=tr_b.state_extras(),
+    )
+    del tr_b, s_b
+
+    tr_c = _mk_trainer()
+    init = tr_c.init_state(jax.random.PRNGKey(0))
+    restored, meta = restore_checkpoint(
+        str(tmp_path), split, {"params": init.params, "opt": init.opt}
+    )
+    tr_c.load_state_extras(meta)
+    s_c = TrainerState(params=restored["params"], opt=restored["opt"], step=split)
+    s_c, _ = _run(tr_c, s_c, N, start=split)
+
+    # --- bit-for-bit equivalence, control-plane state included ---
+    assert s_c.step == s_a.step
+    _assert_trees_equal(s_a.params, s_c.params)
+    _assert_trees_equal(s_a.opt.mu, s_c.opt.mu)
+    _assert_trees_equal(s_a.opt.nu, s_c.opt.nu)
+    np.testing.assert_array_equal(tr_a.elastic.estimator.c, tr_c.elastic.estimator.c)
+    np.testing.assert_array_equal(tr_a.codec.code.B, tr_c.codec.code.B)
+    assert tr_a.codec.version == tr_c.codec.version
+    assert tr_a.scheme.allocation.counts == tr_c.scheme.allocation.counts
+    assert tr_a._steps_taken == tr_c._steps_taken
+    assert tr_a._exact_steps == tr_c._exact_steps
+    # the straggler RNG stream is aligned too: next profiles agree
+    p_a = tr_a.straggler_model.sample(tr_a.m, tr_a._rng)
+    p_c = tr_c.straggler_model.sample(tr_c.m, tr_c._rng)
+    np.testing.assert_array_equal(p_a.slowdown, p_c.slowdown)
+
+
+def test_state_extras_json_roundtrip():
+    """The extras ride in the checkpoint's JSON manifest: they must survive
+    a json encode/decode unchanged (numpy scalars would not)."""
+    tr = _mk_trainer()
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state, _ = _run(tr, state, 3)
+    extras = tr.state_extras()
+    roundtripped = json.loads(json.dumps(extras))
+    tr2 = _mk_trainer()
+    tr2.load_state_extras(roundtripped)
+    np.testing.assert_array_equal(tr.elastic.estimator.c, tr2.elastic.estimator.c)
+    np.testing.assert_array_equal(tr.codec.code.B, tr2.codec.code.B)
+    assert tr2.codec.version == tr.codec.version
+
+
+def test_resume_equivalence_under_deadline_policy(tmp_path):
+    """The unified loop makes resume mode-agnostic: the same extras carry a
+    deadline-mode run (inexact steps, fractional observations) too."""
+    from repro.approx import DeadlinePolicy
+
+    def mk():
+        coding = CodingConfig(scheme="partial_work", s=1, rebalance_every=2)
+        tc = TrainConfig(lr=1e-2, warmup_steps=2, total_steps=16)
+        return CodedTrainer(
+            _ToyModel(), coding, tc, m=4, part_mb=2,
+            straggler_model=TransientStragglers(p=0.4),
+            true_speeds=np.array([1.0, 2.0, 3.0, 4.0]),
+            comm_time=0.01, rng=5,
+            deadline_policy=DeadlinePolicy(mode="bounded_residual", target_residual=0.3),
+        )
+
+    N, split = 6, 3
+    tr_a = mk()
+    s_a = tr_a.init_state(jax.random.PRNGKey(1))
+    s_a, _ = _run(tr_a, s_a, N)
+
+    tr_b = mk()
+    s_b = tr_b.init_state(jax.random.PRNGKey(1))
+    s_b, _ = _run(tr_b, s_b, split)
+    save_checkpoint(str(tmp_path), split, {"params": s_b.params, "opt": s_b.opt},
+                    meta=tr_b.state_extras())
+    tr_c = mk()
+    init = tr_c.init_state(jax.random.PRNGKey(1))
+    restored, meta = restore_checkpoint(str(tmp_path), split,
+                                        {"params": init.params, "opt": init.opt})
+    tr_c.load_state_extras(meta)
+    s_c = TrainerState(params=restored["params"], opt=restored["opt"], step=split)
+    s_c, _ = _run(tr_c, s_c, N, start=split)
+
+    _assert_trees_equal(s_a.params, s_c.params)
+    np.testing.assert_array_equal(tr_a.elastic.estimator.c, tr_c.elastic.estimator.c)
+    assert tr_a._exact_steps == tr_c._exact_steps

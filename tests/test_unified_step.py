@@ -1,0 +1,150 @@
+"""Acceptance property for the §7 refactor: the ONE arrival-driven step
+path reproduces the pre-refactor exact trainer BIT-FOR-BIT.
+
+The oracle below is the old ``CodedTrainer.step`` exact path, verbatim
+(dense ``sim.iteration`` clock, post-hoc earliest-decodable sort, separate
+observe/metrics assembly), run on its own trainer instance with identical
+seeds/profiles.  For every registered scheme, over iterations that decode
+exactly AND iterations that cannot (skips), the unified loop must produce
+identical parameters, optimizer state, metrics, throughput estimates, and
+rebalance decisions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core import scheme_names
+from repro.core.straggler import FixedDelayStragglers, NoStragglers
+from repro.train.trainer import CodedTrainer
+
+
+class _ToyModel:
+    """Duck-typed LM: init + weighted_loss is all the engine needs."""
+
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32),
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+def _batch(k, step, mb=2, d=4):
+    r = np.random.default_rng(1000 + step)
+    return {
+        "x": r.normal(size=(k, mb, d)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+def _mk(scheme, straggler, seed=0, rebalance_every=0):
+    coding = CodingConfig(scheme=scheme, s=1, rebalance_every=rebalance_every)
+    tc = TrainConfig(lr=1e-2, warmup_steps=2, total_steps=16)
+    return CodedTrainer(
+        _ToyModel(), coding, tc, m=4, part_mb=2,
+        straggler_model=straggler,
+        true_speeds=np.array([1.0, 2.0, 3.0, 4.0]),
+        comm_time=0.01, rng=seed,
+    )
+
+
+def _oracle_exact_step(tr, state, batch):
+    """The PRE-§7 exact step path, verbatim (dense clock + post-hoc sort +
+    duplicated metrics assembly), driving tr's own components."""
+    profile = tr.straggler_model.sample(tr.m, tr._rng)
+    itres = tr.elastic.sim.iteration(profile)
+    finish = itres.finish
+    decode_ok = bool(np.isfinite(itres.T))
+    if decode_ok:
+        available = sorted(itres.used)
+    else:
+        available = [i for i in range(tr.m) if np.isfinite(finish[i])]
+    tr._steps_taken += 1
+    outcome = tr.codec.decode_outcome(available)
+    if not outcome.exact:
+        return state, {
+            "loss": float("nan"), "grad_norm": float("nan"), "lr": float("nan"),
+            "skipped": 1.0, "sim_iter_time": float("inf"),
+            "n_stragglers": float(len(profile.straggler_set())),
+            "n_used": 0.0,
+            "decode_residual": outcome.residual, "exact": 0.0,
+            "exact_fraction": tr._exact_fraction(),
+        }
+    tr._exact_steps += 1
+    new_state, metrics = tr.engine.step(state, batch, outcome.a)
+    tr.elastic.estimator.update(finish, tr.codec.code.worker_load())
+    out = {
+        **metrics,
+        "sim_iter_time": float(itres.T),
+        "n_stragglers": float(len(profile.straggler_set())),
+        "n_used": float(len(available)),
+        "skipped": 0.0,
+        "decode_residual": 0.0, "exact": 1.0,
+        "exact_fraction": tr._exact_fraction(),
+    }
+    if tr.elastic.maybe_rebalance(new_state.step, every=tr.coding.rebalance_every):
+        out["rebalanced"] = 1.0
+    return new_state, out
+
+
+def _assert_metrics_equal(m_new, m_old, ctx):
+    assert set(m_new) == set(m_old), ctx
+    for key in m_old:
+        a, b = m_new[key], m_old[key]
+        if isinstance(b, float) and np.isnan(b):
+            assert np.isnan(a), (ctx, key)
+        else:
+            assert a == b, (ctx, key, a, b)
+
+
+@pytest.mark.parametrize("scheme", scheme_names())
+@pytest.mark.parametrize("faulty", [False, True])
+def test_unified_loop_bitmatches_old_exact_path(scheme, faulty):
+    """Same RNG + profiles: unified arrival-driven loop == old exact path,
+    on decodable iterations (params/opt advance identically) and
+    undecodable ones (identical skips), for every registered scheme."""
+    straggler = (
+        # s_model=2 > code s=1: some iterations exceed tolerance -> skips
+        FixedDelayStragglers(s=2, delay=np.inf) if faulty else NoStragglers()
+    )
+    tr_new = _mk(scheme, straggler, rebalance_every=3)
+    tr_old = _mk(scheme, straggler, rebalance_every=3)
+    s_new = tr_new.init_state(jax.random.PRNGKey(0))
+    s_old = tr_old.init_state(jax.random.PRNGKey(0))
+
+    skips = steps = 0
+    for step in range(10):
+        b = _batch(tr_new.k, step)
+        s_new, m_new = tr_new.step(s_new, b)
+        s_old, m_old = _oracle_exact_step(tr_old, s_old, b)
+        _assert_metrics_equal(m_new, m_old, (scheme, faulty, step))
+        for x, y in zip(jax.tree.leaves(s_new.params), jax.tree.leaves(s_old.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(s_new.opt.mu), jax.tree.leaves(s_old.opt.mu)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        skips += int(m_new["skipped"])
+        steps += int(not m_new["skipped"])
+        # the estimator (and therefore future deadlines/rebalances) agrees
+        np.testing.assert_array_equal(tr_new.elastic.estimator.c, tr_old.elastic.estimator.c)
+        assert tr_new.codec.version == tr_old.codec.version
+    assert s_new.step == s_old.step
+    if faulty and scheme in ("naive", "heter_aware", "cyclic"):
+        assert skips > 0  # the inexact-outcome branch was really exercised
+    if not faulty and scheme != "bernoulli":
+        assert steps == 10
+
+
+def test_step_deadline_is_gone():
+    """Single unified step path: the duplicated deadline loop no longer
+    exists on the trainer."""
+    assert not hasattr(CodedTrainer, "_step_deadline")
+    assert not hasattr(CodedTrainer, "tick_deadline")
