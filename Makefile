@@ -2,13 +2,19 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast test-tier2 bench bench-smoke bench-scaling quickstart
+.PHONY: test test-fast test-tier2 test-membership churn-soak bench bench-smoke bench-scaling quickstart
 
 test:
 	./scripts/test.sh
 
 test-fast:  ## skip the slow subprocess SPMD tests
 	./scripts/test.sh --ignore=tests/test_spmd.py
+
+test-membership:  ## elastic-membership churn harness (DESIGN.md §8)
+	./scripts/test.sh tests/test_membership.py
+
+churn-soak:  ## tier-2 churn soak: 50 random transitions at m up to 64
+	CHURN_SOAK=1 ./scripts/test.sh tests/test_membership.py -k soak
 
 test-tier2:  ## tier-1 suite + benchmark smoke (what CI's tier-2 gate runs)
 	RUN_TIER2=1 ./scripts/test.sh

@@ -92,6 +92,14 @@ def main() -> None:
     summary.append(("scaling", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
+    # --- elastic membership remap (DESIGN.md §8) ---
+    t = time.time()
+    rows = scaling.run_membership()
+    claims = scaling.membership_claims(rows)
+    all_rows += rows
+    summary.append(("membership", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
     # --- kernels ---
     t = time.time()
     rows = kernels_bench.run()

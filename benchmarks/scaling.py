@@ -38,6 +38,11 @@ S = 3
 SCHEMES = ("heter_aware", "group_based", "cyclic", "fractional_repetition", "bernoulli")
 BUDGET_S = 2.0  # acceptance: m=256 heter-aware build + first-decodable
 
+# elastic membership (DESIGN.md §8): in-place grow/shrink remap budget
+MEMBERSHIP_M = (20, 64)
+MEMBERSHIP_SCHEMES = ("heter_aware", "group_based", "bernoulli")
+MEMBERSHIP_BUDGET_MS = 250.0  # acceptance: m=64 heter-aware remap < 250 ms
+
 
 def _fast() -> bool:
     return os.environ.get("BENCH_FAST", "0") == "1"
@@ -113,6 +118,72 @@ def _timed_ms(fn) -> float:
     return (time.perf_counter() - t0) * 1e3
 
 
+def bench_membership_one(scheme: str, m: int, *, reps: int, seed: int = 0) -> dict:
+    """In-place grow/shrink remap cost (DESIGN.md §8): build an
+    ElasticController at m workers, time add_workers(+2) / remove_workers(2)
+    transitions (best-of-reps on fresh controllers so every measurement is a
+    cold remap of the same shape), record moved copies vs the bound."""
+    from repro.core import Codec
+    from repro.train.elastic import ElasticController
+
+    k = 2 * m
+
+    def _mk():
+        c = _speeds(m, seed)
+        code = get_scheme(scheme, m=m, k=k, s=S, c=c, rng=seed)
+        return ElasticController(Codec(code), true_speeds=c, c_init=c)
+
+    grow_ms, shrink_ms = [], []
+    grow_stats = shrink_stats = None
+    for r in range(reps):
+        ctl = _mk()
+        joins = _speeds(2, seed + 100 + r)
+        t0 = time.perf_counter()
+        grow_stats = ctl.add_workers(joins)
+        grow_ms.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        shrink_stats = ctl.remove_workers([0, m // 2])
+        shrink_ms.append((time.perf_counter() - t0) * 1e3)
+    return {
+        "bench": "membership", "scheme": scheme, "m": m, "k": k, "s": S,
+        "grow_remap_ms": float(np.min(grow_ms)),
+        "shrink_remap_ms": float(np.min(shrink_ms)),
+        "grow_moved": int(grow_stats.moved),
+        "grow_bound": -1 if grow_stats.bound is None else int(grow_stats.bound),
+        "shrink_moved": int(shrink_stats.moved),
+        "shrink_bound": -1 if shrink_stats.bound is None else int(shrink_stats.bound),
+        "changed_columns": (
+            -1 if grow_stats.changed_columns is None else int(grow_stats.changed_columns)
+        ),
+    }
+
+
+def run_membership(ms=MEMBERSHIP_M, schemes=MEMBERSHIP_SCHEMES, seed: int = 0):
+    reps = 2 if _fast() else 5
+    return [
+        bench_membership_one(scheme, m, reps=reps, seed=seed)
+        for m in ms for scheme in schemes
+    ]
+
+
+def membership_claims(rows) -> dict[str, float]:
+    claims = {}
+    for r in rows:
+        key = f"{r['scheme']}_m{r['m']}"
+        claims[f"remap_ms_{key}"] = max(r["grow_remap_ms"], r["shrink_remap_ms"])
+        claims[f"moved_{key}"] = float(r["grow_moved"] + r["shrink_moved"])
+    worst = max(
+        (
+            max(r["grow_remap_ms"], r["shrink_remap_ms"])
+            for r in rows
+            if r["scheme"] == "heter_aware" and r["m"] == max(MEMBERSHIP_M)
+        ),
+        default=float("inf"),
+    )
+    claims[f"accept_m{max(MEMBERSHIP_M)}_remap_ms"] = worst
+    return claims
+
+
 def run(ms=M_SWEEP, schemes=SCHEMES, seed: int = 0):
     n_profiles = 3 if _fast() else 10
     reps = 2 if _fast() else 5
@@ -140,9 +211,9 @@ def derived_claims(rows) -> dict[str, float]:
     return claims
 
 
-def _merge_into_bench_run(rows, claims) -> None:
+def _merge_into_bench_run(name: str, claims: dict) -> None:
     """Standalone runs keep results/BENCH_run.json current: replace (or
-    append) the 'scaling' section in place, preserving the others."""
+    append) the named section in place, preserving the others."""
     os.makedirs("results", exist_ok=True)
     path = os.path.join("results", "BENCH_run.json")
     doc = {"fast": _fast(), "sections": []}
@@ -153,8 +224,8 @@ def _merge_into_bench_run(rows, claims) -> None:
         except (json.JSONDecodeError, OSError):
             pass
     derived = ";".join(f"{k}={v:.2f}" for k, v in claims.items())
-    section = {"name": "scaling", "us_per_call": 0.0, "derived": derived, "claims": claims}
-    sections = [s for s in doc.get("sections", []) if s.get("name") != "scaling"]
+    section = {"name": name, "us_per_call": 0.0, "derived": derived, "claims": claims}
+    sections = [s for s in doc.get("sections", []) if s.get("name") != name]
     sections.append(section)
     doc["sections"] = sections
     with open(path, "w") as f:
@@ -171,7 +242,19 @@ def main() -> int:
             f"{r['first_decodable_ms']:.2f},{r['decode_cold_us']:.1f},"
             f"{r['decode_warm_us']:.1f},{r['n_groups']}"
         )
-    _merge_into_bench_run(rows, claims)
+    _merge_into_bench_run("scaling", claims)
+
+    mrows = run_membership()
+    mclaims = membership_claims(mrows)
+    print("scheme,m,grow_remap_ms,shrink_remap_ms,grow_moved,grow_bound,shrink_moved,shrink_bound,changed_columns")
+    for r in mrows:
+        print(
+            f"{r['scheme']},{r['m']},{r['grow_remap_ms']:.2f},{r['shrink_remap_ms']:.2f},"
+            f"{r['grow_moved']},{r['grow_bound']},{r['shrink_moved']},"
+            f"{r['shrink_bound']},{r['changed_columns']}"
+        )
+    _merge_into_bench_run("membership", mclaims)
+
     total = claims.get("accept_m256_total_s", float("inf"))
     print(f"# m=256 heter-aware build+first-decodable: {total:.3f}s "
           f"(budget {BUDGET_S}s) -> results/BENCH_run.json", file=sys.stderr)
@@ -181,6 +264,13 @@ def main() -> int:
     if claims.get("accept_m256_decodable_fraction", 0.0) <= 0.0:
         # a gate that only times a decode path must also prove it decodes
         print("FAIL: m=256 heter-aware never decoded a profile", file=sys.stderr)
+        return 1
+    remap = mclaims.get(f"accept_m{max(MEMBERSHIP_M)}_remap_ms", float("inf"))
+    print(f"# m={max(MEMBERSHIP_M)} heter-aware membership remap: {remap:.1f}ms "
+          f"(budget {MEMBERSHIP_BUDGET_MS}ms)", file=sys.stderr)
+    if remap >= MEMBERSHIP_BUDGET_MS:
+        print(f"FAIL: membership remap budget blown ({remap:.1f}ms >= "
+              f"{MEMBERSHIP_BUDGET_MS}ms)", file=sys.stderr)
         return 1
     return 0
 

@@ -1,4 +1,4 @@
-"""Elastic restart: survive a permanent cluster-size change.
+"""Elastic restart AND in-place elastic membership.
 
 Phase 1: train on m=4 heterogeneous workers with transient stragglers,
          checkpointing asynchronously.
@@ -7,6 +7,11 @@ Phase 2: "the two fast VMs are reclaimed" — restart from the checkpoint on a
          allocation, and decode tables are rebuilt from scratch in
          milliseconds (Alg. 1 is O(mk^2) host-side); model state restores
          exactly; training continues from the same loss.
+Phase 3: no restart at all (DESIGN.md §8) — one VM leaves and two join IN
+         PLACE: `trainer.remove_workers` / `add_workers` remap the slot
+         plan with bounded data movement (retained workers keep their
+         partitions wherever the new load shares allow) and re-solve only
+         the disturbed Alg. 1 columns; training never stops.
 
   PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -61,3 +66,15 @@ print(f"phase 2 (m=6): step {state2.step} loss {met2['loss']:.4f} "
       f"(continued from {meta['loss']:.4f})")
 assert met2["loss"] < meta["loss"] * 1.1, "loss should continue falling after elastic restart"
 print("elastic restart OK")
+
+# ---- phase 3: in-place membership change, no restart (DESIGN.md §8) ----
+stats = tr2.remove_workers([1])                 # a slow VM is reclaimed
+stats2 = tr2.add_workers([4.0, 4.0])            # two fast ones join
+print(f"phase 3 (m={tr2.m} in place): leave moved {stats.moved} copies "
+      f"(bound {stats.bound}), join moved {stats2.moved} "
+      f"(re-solved {stats2.changed_columns}/{tr2.k} B columns)")
+for step in range(state2.step, state2.step + 6):
+    state2, met3 = tr2.step(state2, data2.batch(step))
+assert met3["membership_epoch"] == 2.0
+print(f"phase 3: step {state2.step} loss {met3['loss']:.4f} — "
+      "in-place elastic membership OK")

@@ -11,4 +11,6 @@ if [[ "${RUN_TIER2:-0}" == "1" ]]; then
   make bench-smoke
   echo "== tier-2: large-m scaling gate (BENCH_FAST=1 benchmarks/scaling.py) =="
   make bench-scaling
+  echo "== tier-2: membership churn soak (50 transitions, m up to 64) =="
+  make churn-soak
 fi

@@ -26,10 +26,44 @@ import numpy as np
 
 from repro.core.allocation import Allocation
 from repro.core.coding import CodingScheme
-from repro.core.registry import GradientCode, register_scheme
+from repro.core.registry import GradientCode, MembershipStats, register_scheme
 from repro.core.schemes import HeterAwareCode
 
 __all__ = ["BernoulliCode", "PartialWorkCode", "build_bernoulli"]
+
+
+def _patch_coverage(
+    hold: np.ndarray, c: np.ndarray, cap: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Guarantee every partition ≥1 holder: patch uncovered partitions onto
+    c-weighted workers with room.  Mutates ``hold``; returns the (m,) count
+    of patches applied per worker (the movement a membership transition
+    charges to retained workers)."""
+    m = hold.shape[0]
+    patched = np.zeros(m, dtype=np.int64)
+    for j in np.flatnonzero(~hold.any(axis=0)):
+        room = hold.sum(axis=1) < cap
+        if not room.any():
+            # every worker at cap; m·cap ≥ k guarantees a redundant copy
+            # exists somewhere — free that slot first
+            h = hold.sum(axis=0)
+            ws, js = np.nonzero(hold & (h[None, :] >= 2))
+            pick = int(rng.integers(ws.size))
+            hold[ws[pick], js[pick]] = False
+            room = hold.sum(axis=1) < cap
+        w = c * room
+        i = int(rng.choice(m, p=w / w.sum()))
+        hold[i, j] = True
+        patched[i] += 1
+    return patched
+
+
+def _bernoulli_scheme_from_hold(hold: np.ndarray, k: int) -> CodingScheme:
+    holders = hold.sum(axis=0)
+    B = np.where(hold, 1.0 / holders[None, :], 0.0)
+    parts = tuple(tuple(int(j) for j in np.flatnonzero(row)) for row in hold)
+    alloc = Allocation(k=k, s=0, counts=tuple(len(ps) for ps in parts), partitions=parts)
+    return CodingScheme(name="bernoulli", B=B, allocation=alloc, s=0)
 
 
 def build_bernoulli(
@@ -64,26 +98,8 @@ def build_bernoulli(
             drop = rng.choice(held, size=held.size - cap, replace=False)
             hold[i, drop] = False
     # guarantee coverage: patch uncovered partitions onto c-weighted workers
-    for j in np.flatnonzero(~hold.any(axis=0)):
-        room = hold.sum(axis=1) < cap
-        if not room.any():
-            # every worker at cap; m·cap ≥ k guarantees a redundant copy
-            # exists somewhere — free that slot first
-            h = hold.sum(axis=0)
-            ws, js = np.nonzero(hold & (h[None, :] >= 2))
-            pick = int(rng.integers(ws.size))
-            hold[ws[pick], js[pick]] = False
-            room = hold.sum(axis=1) < cap
-        w = c * room
-        i = int(rng.choice(m, p=w / w.sum()))
-        hold[i, j] = True
-    holders = hold.sum(axis=0)
-    B = np.where(hold, 1.0 / holders[None, :], 0.0)
-    parts = tuple(tuple(int(j) for j in np.flatnonzero(hold[i])) for i in range(m))
-    alloc = Allocation(
-        k=k, s=0, counts=tuple(len(ps) for ps in parts), partitions=parts
-    )
-    return CodingScheme(name="bernoulli", B=B, allocation=alloc, s=0)
+    _patch_coverage(hold, c, cap, rng)
+    return _bernoulli_scheme_from_hold(hold, k)
 
 
 @register_scheme("bernoulli")
@@ -98,6 +114,52 @@ class BernoulliCode(GradientCode):
     def build(self, c: np.ndarray) -> CodingScheme:
         return build_bernoulli(
             self.requested_k, self.s, c, rng=self._rng, max_load=self.max_load
+        )
+
+    def resize(self, c, old_of_new) -> MembershipStats:
+        """Stable stochastic transition: retained workers keep their Bernoulli
+        support verbatim (zero movement unless a departure uncovered a
+        partition that patches back onto a survivor); joiners draw fresh
+        c-proportional rows; 1/h_j coefficients are recomputed from the new
+        realized holder counts.  Movement bound: one patch per partition
+        whose holders all departed, so ``moved ≤ copies held by the removed
+        workers``."""
+        c = self._check_resize_args(c, old_of_new)
+        prev = self.scheme
+        m_new, k = len(old_of_new), self.k
+        cap = k if self.max_load is None else min(k, int(self.max_load))
+        hold = np.zeros((m_new, k), dtype=bool)
+        removed_load = sum(prev.allocation.counts) - sum(
+            prev.allocation.counts[o] for o in old_of_new if o is not None
+        )
+        for i, o in enumerate(old_of_new):
+            if o is not None:
+                hold[i, list(prev.allocation.partitions[o])] = True
+        p = np.clip((self.s + 1) * c / c.sum(), 0.0, 1.0)
+        for i, o in enumerate(old_of_new):
+            if o is not None:
+                continue
+            row = self._rng.uniform(size=k) < p[i]
+            held = np.flatnonzero(row)
+            if held.size > cap:
+                drop = self._rng.choice(held, size=held.size - cap, replace=False)
+                row[drop] = False
+            hold[i] = row
+        patched = _patch_coverage(hold, c, cap, self._rng)
+        moved = int(sum(patched[i] for i, o in enumerate(old_of_new) if o is not None))
+        self._build_rng_state = None  # path-dependent from here on
+        self.m = m_new
+        self.c = c
+        self.scheme = _bernoulli_scheme_from_hold(hold, k)
+        self._reset_decode_cache()
+        self._membership_epoch += 1
+        return MembershipStats(
+            m_before=prev.m,
+            m_after=m_new,
+            retained=sum(1 for o in old_of_new if o is not None),
+            moved=moved,
+            bound=int(removed_load),
+            changed_columns=None,
         )
 
 

@@ -14,9 +14,17 @@ Public API:
   aggregator:  coded gradient aggregation on a JAX mesh
 """
 
-from repro.core.allocation import Allocation, allocate, support_matrix
+from repro.core.allocation import (
+    Allocation,
+    RemapResult,
+    allocate,
+    count_moved,
+    remap_allocation,
+    support_matrix,
+)
 from repro.core.registry import (
     GradientCode,
+    MembershipStats,
     get_scheme,
     register_scheme,
     scheme_class,
@@ -53,7 +61,9 @@ from repro.core.groups import (
 from repro.core.simulator import (
     ArrivalEvent,
     ArrivalStream,
+    ChurnSchedule,
     ClusterSim,
+    MembershipEvent,
     PartitionTimes,
     theoretical_optimal_time,
 )
@@ -74,13 +84,17 @@ from repro.core.throughput import ThroughputEstimator
 
 __all__ = [
     "GradientCode",
+    "MembershipStats",
     "get_scheme",
     "register_scheme",
     "scheme_class",
     "scheme_names",
     "Codec",
     "Allocation",
+    "RemapResult",
     "allocate",
+    "count_moved",
+    "remap_allocation",
     "support_matrix",
     "CodingScheme",
     "build_cyclic",
@@ -104,7 +118,9 @@ __all__ = [
     "prune_groups",
     "ArrivalEvent",
     "ArrivalStream",
+    "ChurnSchedule",
     "ClusterSim",
+    "MembershipEvent",
     "PartitionTimes",
     "theoretical_optimal_time",
     "ComposedModel",

@@ -27,9 +27,12 @@ import numpy as np
 
 __all__ = [
     "Allocation",
+    "RemapResult",
     "proportional_counts",
     "cyclic_assignment",
     "allocate",
+    "remap_allocation",
+    "count_moved",
     "support_matrix",
 ]
 
@@ -169,6 +172,194 @@ def allocate(
 def uniform_allocation(k: int, s: int, m: int) -> Allocation:
     """Homogeneous allocation (Tandon's cyclic scheme when k == m)."""
     return allocate(k, s, [1.0] * m)
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapResult:
+    """Outcome of a membership-preserving allocation remap.
+
+    Attributes:
+      allocation: the new assignment (every partition has exactly s+1
+        distinct holders, worker i holds ``counts_new[i]`` partitions).
+      moved: copies newly acquired by RETAINED workers — the data that must
+        actually move between surviving machines (a joining worker's
+        bootstrap fetch is not "movement" of existing state).
+      bound: the documented stability bound on ``moved``:
+        ``sum_i max(0, n_new_i - n_old_i)`` over retained workers, plus one
+        re-acquisition per forced shed.  ``moved <= bound`` always holds.
+      forced_sheds: kept copies the completion search had to give up (0 in
+        every observed case; the bound accounts for them if they happen).
+    """
+
+    allocation: Allocation
+    moved: int
+    bound: int
+    forced_sheds: int
+
+
+def count_moved(
+    prev: Allocation, new: Allocation, old_of_new: Sequence[int | None]
+) -> int:
+    """Copies acquired by retained workers: |new_parts(i) \\ old_parts(o)|
+    summed over new workers ``i`` retained from old index ``o``."""
+    moved = 0
+    for i, o in enumerate(old_of_new):
+        if o is None:
+            continue
+        moved += len(set(new.partitions[i]) - set(prev.partitions[o]))
+    return moved
+
+
+def remap_allocation(
+    prev: Allocation,
+    counts_new: Sequence[int],
+    old_of_new: Sequence[int | None],
+) -> RemapResult:
+    """Membership-preserving reassignment: grow/shrink the worker set while
+    keeping retained workers' partitions wherever the new load counts allow.
+
+    ``old_of_new[i]`` is new worker i's index in ``prev`` (None = joined
+    fresh).  The transition protocol (DESIGN.md §8):
+
+      1. every retained worker KEEPS ``min(n_old, n_new)`` of its partitions
+         — when it must shed, copies of the partitions with the most other
+         surviving holders go first (they create the least deficit);
+      2. the per-partition deficits (each partition must end with exactly
+         ``s+1`` distinct holders) are filled from workers with spare
+         capacity, most-spare-first; a dead end (every spare worker already
+         holds the partition) is repaired by an augmenting chain that only
+         re-routes *newly assigned* copies, never kept ones.
+
+    Step 1 fixes the movement bound exactly: a retained worker acquires at
+    most ``max(0, n_new − n_old)`` partitions, so total retained-worker
+    movement is ``Σ max(0, Δn)`` — independent of k and of how many workers
+    churned.  Departed load lands on joiners and on retained workers whose
+    allocation share grew, never shuffles copies that could have stayed.
+    """
+    k, s = prev.k, prev.s
+    m_new = len(old_of_new)
+    counts = np.asarray(counts_new, dtype=np.int64)
+    if counts.shape != (m_new,):
+        raise ValueError(f"counts_new length {counts.shape} != len(old_of_new)={m_new}")
+    if int(counts.sum()) != k * (s + 1):
+        raise ValueError(f"sum(counts_new)={int(counts.sum())} != k*(s+1)={k * (s + 1)}")
+    if counts.size and int(counts.max(initial=0)) > k:
+        raise ValueError(f"n_i={int(counts.max())} exceeds k={k}")
+
+    # --- step 1: kept sets + shed selection -------------------------------
+    survived = np.zeros(k, dtype=np.int64)
+    kept: list[list[int]] = []
+    for i, o in enumerate(old_of_new):
+        parts = list(prev.partitions[o]) if o is not None else []
+        kept.append(parts)
+        for p in parts:
+            survived[p] += 1
+    bound = 0
+    for i, o in enumerate(old_of_new):
+        if o is None:
+            continue
+        excess = len(kept[i]) - int(counts[i])
+        bound += max(0, -excess)
+        for _ in range(max(0, excess)):
+            # shed the copy whose partition keeps the most other holders
+            p = max(kept[i], key=lambda q: (survived[q], q))
+            kept[i].remove(p)
+            survived[p] -= 1
+
+    # --- step 2: fill deficits, most-spare-first, augment on dead ends ----
+    holds = [set(ps) for ps in kept]
+    new_assign: list[list[int]] = [[] for _ in range(m_new)]
+    spare = counts - np.array([len(ps) for ps in kept], dtype=np.int64)
+    deficit = (s + 1) - survived
+    if np.any(deficit < 0):  # prev had >s+1 holders somewhere: invalid input
+        j = int(np.argmin(deficit))
+        raise ValueError(f"partition {j} had more than s+1={s + 1} holders")
+    forced_sheds = 0
+
+    def _take(i: int, j: int) -> None:
+        new_assign[i].append(j)
+        holds[i].add(j)
+        spare[i] -= 1
+
+    def _augment(j: int) -> bool:
+        """Free one unit of capacity on a worker not holding ``j`` by
+        re-routing newly assigned copies along a BFS chain ending at a
+        worker with spare capacity.  Kept copies never move."""
+        parent: dict[int, tuple[int, int]] = {}  # v -> (u, q): v offloads q to u
+        frontier = [u for u in range(m_new) if spare[u] > 0]
+        seen = set(frontier)
+        while frontier:
+            nxt: list[int] = []
+            for u in frontier:
+                for v in range(m_new):
+                    if v in seen:
+                        continue
+                    q = next((q for q in new_assign[v] if q not in holds[u]), None)
+                    if q is None:
+                        continue
+                    parent[v] = (u, q)
+                    if j not in holds[v]:
+                        # walk the chain: shift each re-routable copy forward
+                        while v in parent:
+                            u2, q2 = parent[v]
+                            new_assign[v].remove(q2)
+                            holds[v].discard(q2)
+                            spare[v] += 1
+                            _take(u2, q2)
+                            v = u2
+                        return True
+                    seen.add(v)
+                    nxt.append(v)
+            frontier = nxt
+        return False
+
+    order = sorted(range(k), key=lambda j: (-deficit[j], j))
+    pending = [j for j in order for _ in range(int(deficit[j]))]
+    guard = 0
+    while pending:
+        j = pending.pop(0)
+        open_workers = [i for i in range(m_new) if spare[i] > 0 and j not in holds[i]]
+        if open_workers:
+            _take(max(open_workers, key=lambda i: (spare[i], -i)), j)
+            continue
+        if _augment(j):
+            i = max(
+                (i for i in range(m_new) if spare[i] > 0 and j not in holds[i]),
+                key=lambda i: (spare[i], -i),
+            )
+            _take(i, j)
+            continue
+        # genuinely stuck: give up one kept copy elsewhere (counts as one
+        # extra move in the bound) and retry both partitions
+        guard += 1
+        if guard > k * (s + 1):
+            raise RuntimeError("remap_allocation could not complete the assignment")
+        victim = next(
+            i for i in range(m_new)
+            if j not in holds[i] and any(q != j for q in kept[i])
+        )
+        q = max((q for q in kept[victim] if q != j), key=lambda q: q)
+        kept[victim].remove(q)
+        holds[victim].discard(q)
+        spare[victim] += 1
+        forced_sheds += 1  # the +1 re-acquisition lands in the final bound
+        pending.insert(0, j)
+        pending.append(q)
+
+    partitions = tuple(
+        tuple(kept[i]) + tuple(sorted(new_assign[i])) for i in range(m_new)
+    )
+    alloc = Allocation(
+        k=k, s=s, counts=tuple(int(x) for x in counts), partitions=partitions
+    )
+    # honest movement: what a retained worker holds NOW that it did not hold
+    # before (re-acquiring its own forced-shed copy is not a fetch)
+    moved = count_moved(prev, alloc, old_of_new)
+    assert moved <= bound + forced_sheds, (moved, bound, forced_sheds)
+    return RemapResult(
+        allocation=alloc, moved=moved, bound=bound + forced_sheds,
+        forced_sheds=forced_sheds,
+    )
 
 
 def support_matrix(alloc: Allocation) -> np.ndarray:

@@ -23,7 +23,13 @@ import numpy as np
 from repro.core.aggregator import CodedPlan, make_plan, pack_coded_batch, slot_weights
 from repro.core.coding import CodingScheme
 from repro.core.decoding import DecodeOutcome
-from repro.core.registry import GradientCode, get_scheme, plan_slot_capacity, scheme_class
+from repro.core.registry import (
+    GradientCode,
+    MembershipStats,
+    get_scheme,
+    plan_slot_capacity,
+    scheme_class,
+)
 
 if TYPE_CHECKING:  # avoid a hard configs dependency at import time
     from repro.configs.base import CodingConfig
@@ -36,6 +42,13 @@ class Codec:
 
     def __init__(self, code: GradientCode, n_slots: int | None = None):
         self.code = code
+        # the cap the CALLER imposed at construction (None = unconstrained):
+        # membership transitions re-derive slot capacity per worker set, but
+        # must never exceed this (``from_config`` clears it — its max_load
+        # is codec-derived, not a user bound)
+        self.user_max_load: int | None = (
+            None if code.max_load is None else int(code.max_load)
+        )
         n_max = max(1, max(code.allocation.counts))
         if n_slots is None:
             # rebalanceable codes keep headroom for allocation drift;
@@ -85,7 +98,9 @@ class Codec:
             c = np.asarray(c_init, np.float64) if c_init is not None else None
             cap = plan_slot_capacity(k_eff, coding.s, m, c)
         code = get_scheme(coding.scheme, m=m, k=k_req, s=coding.s, c=c_init, rng=rng, max_load=cap)
-        return cls(code, n_slots=cap)
+        codec = cls(code, n_slots=cap)
+        codec.user_max_load = None  # cap above is capacity-derived, not a user bound
+        return codec
 
     # -- views -------------------------------------------------------------
 
@@ -139,20 +154,78 @@ class Codec:
     # -- checkpoint state ---------------------------------------------------
 
     def state_dict(self) -> dict:
-        """JSON-able plan identity: the code's construction state + the
-        monotone plan version, so a restore reproduces B (bit-for-bit, by
-        replaying the build from its saved RNG state) AND the device-cache
-        invalidation counter."""
-        return {"code": self.code.state_dict(), "version": self.version}
+        """JSON-able plan identity: the code's explicit scheme state, the
+        slot capacity (membership transitions re-derive it), and the
+        monotone plan version — the device-cache invalidation counter."""
+        return {
+            "code": self.code.state_dict(),
+            "version": self.version,
+            "n_slots": self.n_slots,
+            "user_max_load": self.user_max_load,
+        }
 
     def load_state_dict(self, state: dict) -> None:
         shape_before = self.plan.slot_pids.shape
+        epoch_before = self.code.membership_epoch
         self.code.load_state_dict(state["code"])
+        self.n_slots = int(state.get("n_slots", self.n_slots))
+        if "user_max_load" in state:
+            uml = state["user_max_load"]
+            self.user_max_load = None if uml is None else int(uml)
         self.plan = make_plan(self.code.scheme, self.n_slots)
-        assert self.plan.slot_pids.shape == shape_before  # contract, DESIGN.md §4
+        # shape stability holds UNLESS a membership transition sits on
+        # either side of the restore (forward resume past one, or rollback
+        # from beyond one) — then the restore IS the one allowed shape
+        # change (same recompile the live transition paid; DESIGN.md §8)
+        if epoch_before == 0 and self.code.membership_epoch == 0:
+            assert self.plan.slot_pids.shape == shape_before  # contract, §4
         self.version = int(state["version"])
 
     # -- elastic -----------------------------------------------------------
+
+    def remap_members(
+        self, c: Sequence[float], old_of_new: Sequence[int | None]
+    ) -> MembershipStats:
+        """In-place membership change (DESIGN.md §8): resize the code to
+        ``len(old_of_new)`` workers, re-derive the slot capacity for the new
+        worker set, rebuild the plan, and bump ``version`` EXACTLY once so
+        every device-resident copy (engine plan tensors, decode/outcome
+        LRUs died with the old B already) invalidates in one step.
+
+        Unlike :meth:`rebalance`, shapes DO change — (m, n_slots) tracks the
+        new m — so downstream jits retrace once; that recompile is inherent
+        to changing the worker set and is the entire cost the
+        checkpoint-restart path used to pay on every transition.
+        """
+        code = self.code
+        m_new = len(old_of_new)
+        cap = None
+        prev_max_load = code.max_load
+        if code.supports_rebalance:
+            k_eff = type(code).effective_k(m_new, code.requested_k)
+            c_arr = np.asarray(c, dtype=np.float64)
+            cap = plan_slot_capacity(k_eff, code.s, m_new, c_arr)
+            # the caller-imposed skew cap survives every transition; if the
+            # new worker set cannot fit k(s+1) copies under it, the
+            # allocation raises a clear feasibility error rather than
+            # silently discarding the caller's bound
+            if self.user_max_load is not None:
+                cap = min(cap, self.user_max_load)
+            code.max_load = cap
+        try:
+            stats = code.resize(c, old_of_new)
+        except Exception:
+            # infeasible transition: the code is unchanged — max_load must
+            # not stay clobbered for the still-live worker set
+            code.max_load = prev_max_load
+            raise
+        n_max = max(1, max(code.allocation.counts))
+        self.n_slots = max(cap, n_max) if cap is not None else n_max
+        if code.supports_rebalance and (code.max_load is None or code.max_load > self.n_slots):
+            code.max_load = self.n_slots
+        self.plan = make_plan(code.scheme, self.n_slots)
+        self.version += 1
+        return stats
 
     def rebalance(self, c: Sequence[float]) -> None:
         """Re-encode from fresh throughput estimates; plan VALUES change,

@@ -32,6 +32,9 @@ __all__ = [
     "build_cyclic",
     "build_naive",
     "build_fractional_repetition",
+    "remap_alg1_columns",
+    "scheme_to_state",
+    "scheme_from_state",
     "make_scheme",
     "satisfies_condition1",
 ]
@@ -111,6 +114,120 @@ def build_heter_aware(
     alloc = allocate(k, s, c, max_load)
     B, C = _build_from_support(alloc, rng)
     return CodingScheme(name="heter_aware", B=B, allocation=alloc, s=s, C=C)
+
+
+def remap_alg1_columns(
+    prev: CodingScheme,
+    alloc_new: Allocation,
+    old_of_new: Sequence[int | None],
+    rng: np.random.Generator,
+) -> tuple[CodingScheme, int]:
+    """Membership-remapped Alg. 1 rebuild: re-solve ONLY the B columns whose
+    holder set changed (DESIGN.md §8).
+
+    Retained workers keep their C column; joiners draw fresh ones.  A
+    partition whose s+1 holders all survived with the same membership keeps
+    its B column bit-for-bit (its C submatrix is unchanged), so a small
+    join/leave touches only the columns the transition actually disturbed.
+    Ill-conditioned changed submatrices redraw the FRESH columns only (the
+    retained ones anchor the unchanged columns' validity); with no fresh
+    columns to redraw, fall back to a full redraw + full re-solve.
+
+    Returns ``(scheme, n_changed_columns)``.  ``C·B = 1`` column-wise and
+    Condition 1 hold exactly as for a fresh Alg. 1 build (the concatenated
+    C stays generic w.p. 1).
+    """
+    if prev.C is None:
+        raise ValueError("remap_alg1_columns needs a scheme built by Alg. 1 (C matrix)")
+    m_new, k, s = alloc_new.m, alloc_new.k, alloc_new.s
+    if k != prev.k or s != prev.s:
+        raise ValueError("membership remap never changes k or s")
+    old_idx = np.array([-1 if o is None else int(o) for o in old_of_new], np.int64)
+    new_of_old = np.full(prev.m, -1, dtype=np.int64)
+    new_of_old[old_idx[old_idx >= 0]] = np.flatnonzero(old_idx >= 0)
+
+    holders_new = alloc_new.holders_matrix()  # (k, s+1), worker-ascending
+    holders_old = prev.allocation.holders_matrix()
+    # retained workers keep relative order, joiners append, so mapping old
+    # holder rows stays ascending — rows compare directly, no re-sort
+    mapped_old = new_of_old[holders_old]  # (k, s+1); -1 where holder departed
+    changed = (mapped_old < 0).any(axis=1) | (mapped_old != holders_new).any(axis=1)
+
+    fresh_cols = np.flatnonzero(old_idx < 0)
+    C = np.empty((s + 1, m_new), dtype=np.float64)
+    retained_cols = np.flatnonzero(old_idx >= 0)
+    C[:, retained_cols] = prev.C[:, old_idx[retained_cols]]
+    ones = np.ones((1, s + 1, 1), dtype=np.float64)
+    for attempt in range(_MAX_REDRAWS):
+        C[:, fresh_cols] = rng.uniform(size=(s + 1, fresh_cols.size))
+        idx = np.flatnonzero(changed)
+        if idx.size == 0:
+            sol = np.empty((0, s + 1))
+            break
+        Cj = C[:, holders_new[idx]].transpose(1, 0, 2)  # (nc, s+1, s+1)
+        if float(np.linalg.cond(Cj).max()) > _COND_MAX:
+            if fresh_cols.size == 0 or attempt == _MAX_REDRAWS - 2:
+                # nothing redrawable can fix it: fall back to a full rebuild
+                B, C = _build_from_support(alloc_new, rng)
+                return (
+                    CodingScheme(name=prev.name, B=B, allocation=alloc_new, s=s, C=C),
+                    k,
+                )
+            continue
+        sol = np.linalg.solve(Cj, np.broadcast_to(ones, (idx.size, s + 1, 1)))[..., 0]
+        break
+    else:  # pragma: no cover - loop always breaks or falls back
+        raise RuntimeError("could not draw a well-conditioned C")
+
+    B = np.zeros((m_new, k), dtype=np.float64)
+    unchanged = np.flatnonzero(~changed)
+    if unchanged.size:
+        B[mapped_old[unchanged].reshape(-1), np.repeat(unchanged, s + 1)] = (
+            prev.B[holders_old[unchanged].reshape(-1), np.repeat(unchanged, s + 1)]
+        )
+    if idx.size:
+        B[holders_new[idx].reshape(-1), np.repeat(idx, s + 1)] = sol.reshape(-1)
+    return (
+        CodingScheme(name=prev.name, B=B, allocation=alloc_new, s=s, C=C),
+        int(changed.sum()),
+    )
+
+
+def scheme_to_state(scheme: CodingScheme) -> dict:
+    """JSON-able snapshot of a complete scheme — the explicit form membership
+    transitions need (a post-churn B is path-dependent; replaying the
+    original build cannot reproduce it)."""
+    alloc = scheme.allocation
+    return {
+        "name": scheme.name,
+        "B": [[float(x) for x in row] for row in scheme.B],
+        "s": int(scheme.s),
+        "k": int(alloc.k),
+        "alloc_s": int(alloc.s),
+        "counts": [int(x) for x in alloc.counts],
+        "partitions": [[int(p) for p in ps] for ps in alloc.partitions],
+        "groups": [[int(w) for w in g] for g in scheme.groups],
+        "C": None if scheme.C is None else [[float(x) for x in row] for row in scheme.C],
+    }
+
+
+def scheme_from_state(state: dict) -> CodingScheme:
+    """Inverse of :func:`scheme_to_state` — bit-exact (JSON floats
+    round-trip shortest-repr exact)."""
+    alloc = Allocation(
+        k=int(state["k"]),
+        s=int(state["alloc_s"]),
+        counts=tuple(int(x) for x in state["counts"]),
+        partitions=tuple(tuple(int(p) for p in ps) for ps in state["partitions"]),
+    )
+    return CodingScheme(
+        name=state["name"],
+        B=np.asarray(state["B"], dtype=np.float64),
+        allocation=alloc,
+        s=int(state["s"]),
+        groups=tuple(tuple(int(w) for w in g) for g in state["groups"]),
+        C=None if state["C"] is None else np.asarray(state["C"], dtype=np.float64),
+    )
 
 
 def build_cyclic(m: int, s: int, rng: np.random.Generator | int | None = 0) -> CodingScheme:

@@ -36,6 +36,7 @@ __all__ = [
     "find_greedy_groups",
     "prune_groups",
     "build_group_based",
+    "group_code_from_alloc",
     "GREEDY_GROUP_THRESHOLD",
 ]
 
@@ -211,6 +212,17 @@ def build_group_based(
     """
     rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
     alloc = allocate(k, s, c, max_load)
+    return group_code_from_alloc(alloc, s, rng)
+
+
+def group_code_from_alloc(
+    alloc: Allocation, s: int, rng: np.random.Generator
+) -> CodingScheme:
+    """Group cover + Alg. 3 coefficients for a GIVEN allocation — the piece
+    membership transitions reuse on a stability-remapped assignment (whose
+    arcs are no longer contiguous; the cover finds whatever tilings remain,
+    and P = 0 degrades to plain Alg. 1 at full s)."""
+    k = alloc.k
     if alloc.m > GREEDY_GROUP_THRESHOLD:
         groups = list(find_greedy_groups(alloc))
     else:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import abc
 import copy
+import dataclasses
 import importlib
 import math
 from functools import lru_cache
@@ -35,7 +36,8 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.coding import CodingScheme
+from repro.core.allocation import count_moved
+from repro.core.coding import CodingScheme, scheme_from_state, scheme_to_state
 from repro.core.decoding import (
     DecodeError,
     DecodeOutcome,
@@ -46,11 +48,36 @@ from repro.core.decoding import (
 
 __all__ = [
     "GradientCode",
+    "MembershipStats",
     "register_scheme",
     "get_scheme",
     "scheme_class",
     "scheme_names",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipStats:
+    """One in-place membership transition, as the runtime reports it.
+
+    Attributes:
+      m_before / m_after: worker count across the transition.
+      retained: workers surviving it.
+      moved: partition copies newly acquired by retained workers (the data
+        that must move between surviving machines).
+      bound: the scheme's documented stability bound on ``moved``; None for
+        structural schemes (k = m changes, the whole layout is rebuilt and
+        movement is inherently unbounded).
+      changed_columns: B columns re-solved by the transition; None when the
+        scheme rebuilds all coefficients.
+    """
+
+    m_before: int
+    m_after: int
+    retained: int
+    moved: int
+    bound: int | None
+    changed_columns: int | None
 
 _REGISTRY: dict[str, type["GradientCode"]] = {}
 
@@ -156,6 +183,7 @@ class GradientCode(abc.ABC):
         self.max_load = max_load
         self._rng = rng if isinstance(rng, np.random.Generator) else np.random.default_rng(rng)
         self._decode_cache_size = decode_cache_size
+        self._membership_epoch = 0
         c = np.ones(m, dtype=np.float64) if c is None else np.asarray(c, dtype=np.float64)
         if c.shape != (m,):
             raise ValueError(f"len(c)={c.shape[0] if c.ndim else '?'} != m={m}")
@@ -193,22 +221,107 @@ class GradientCode(abc.ABC):
         self._reset_decode_cache()
         return self.scheme
 
+    # -- elastic membership (DESIGN.md §8) -----------------------------------
+
+    def _check_resize_args(
+        self, c: np.ndarray, old_of_new: Sequence[int | None]
+    ) -> np.ndarray:
+        m_new = len(old_of_new)
+        if m_new <= self.s:
+            raise ValueError(f"membership change needs m > s, got m={m_new}, s={self.s}")
+        c = np.asarray(c, dtype=np.float64)
+        if c.shape != (m_new,):
+            raise ValueError(f"len(c)={c.shape} != new m={m_new}")
+        olds = [o for o in old_of_new if o is not None]
+        if len(set(olds)) != len(olds) or any(not 0 <= o < self.m for o in olds):
+            raise ValueError(f"old_of_new maps old workers out of range or twice: {old_of_new}")
+        if olds != sorted(olds):
+            raise ValueError("retained workers must keep their relative order")
+        if not olds and self.m > 0:
+            raise ValueError("membership change must retain at least one worker")
+        return c
+
+    def resize(self, c: Sequence[float], old_of_new: Sequence[int | None]) -> MembershipStats:
+        """In-place membership change: grow/shrink the worker set to
+        ``len(old_of_new)`` workers (``old_of_new[i]`` = new worker i's old
+        index, None = joined fresh), re-encoding against throughputs ``c``.
+
+        Base implementation: a full rebuild at the new ``m`` — correct for
+        every scheme, with no stability guarantee (structural schemes force
+        ``k = m``, so the whole layout changes by construction).  Schemes
+        with a stable remap (heter-aware family, group_based, bernoulli)
+        override this with a bounded-movement transition.  Either way the
+        decode caches die with the old B, and ``m``/``c``/the scheme are
+        updated atomically.
+        """
+        c = self._check_resize_args(c, old_of_new)
+        prev = self.scheme
+        self.m = len(old_of_new)
+        if self.structural_k:
+            self.requested_k = self.m
+        self.c = c
+        self.scheme = self._build_tracked(c)
+        self._reset_decode_cache()
+        self._membership_epoch += 1
+        return MembershipStats(
+            m_before=prev.m,
+            m_after=self.m,
+            retained=sum(1 for o in old_of_new if o is not None),
+            moved=count_moved(prev.allocation, self.allocation, old_of_new)
+            if prev.k == self.k
+            else sum(self.allocation.counts[i] for i, o in enumerate(old_of_new) if o is not None),
+            bound=None,
+            changed_columns=None,
+        )
+
+    @property
+    def membership_epoch(self) -> int:
+        """Transitions applied so far (0 = the constructed worker set)."""
+        return self._membership_epoch
+
     # -- checkpoint state ---------------------------------------------------
 
     def state_dict(self) -> dict:
-        """JSON-able construction state: the applied throughputs + the RNG
-        state the current B was drawn from.  ``load_state_dict`` replays the
-        build, reproducing B bit-for-bit AND leaving the RNG exactly where
-        the saved run's was (builds are the only RNG consumer)."""
+        """JSON-able snapshot: sizes, throughputs, the CURRENT RNG state,
+        and the scheme itself in explicit form.  A post-membership B is
+        path-dependent (incremental column rebuilds, C columns inherited
+        across transitions), so restore loads B/allocation/C directly —
+        bit-for-bit — instead of replaying the build; restoring the live
+        RNG state keeps every FUTURE rebuild aligned with the saved run
+        (builds are the only RNG consumer)."""
         return {
+            "m": int(self.m),
+            "requested_k": int(self.requested_k),
+            "max_load": None if self.max_load is None else int(self.max_load),
+            "membership_epoch": int(self._membership_epoch),
             "c": [float(x) for x in self.c],
-            "build_rng_state": copy.deepcopy(self._build_rng_state),
+            "rng_state": copy.deepcopy(self._rng.bit_generator.state),
+            "scheme": scheme_to_state(self.scheme),
         }
 
     def load_state_dict(self, state: dict) -> None:
+        if "scheme" not in state:
+            # pre-§8 checkpoint format: {c, build_rng_state} — replay the
+            # build from the saved pre-build RNG snapshot (the old restore
+            # semantics).  That format predates membership transitions, so
+            # the restore rolls the worker set back to len(c) and epoch 0
+            # (the loading code may itself have churned since construction).
+            self.c = np.asarray(state["c"], dtype=np.float64)
+            self.m = int(self.c.shape[0])
+            if self.structural_k:
+                self.requested_k = self.m
+            self._membership_epoch = 0
+            self._rng.bit_generator.state = copy.deepcopy(state["build_rng_state"])
+            self.scheme = self._build_tracked(self.c)
+            self._reset_decode_cache()
+            return
+        self.m = int(state["m"])
+        self.requested_k = int(state["requested_k"])
+        self.max_load = None if state["max_load"] is None else int(state["max_load"])
+        self._membership_epoch = int(state["membership_epoch"])
         self.c = np.asarray(state["c"], dtype=np.float64)
-        self._rng.bit_generator.state = state["build_rng_state"]
-        self.scheme = self._build_tracked(self.c)
+        self._rng.bit_generator.state = copy.deepcopy(state["rng_state"])
+        self.scheme = scheme_from_state(state["scheme"])
         self._reset_decode_cache()
 
     # -- convenient views --------------------------------------------------

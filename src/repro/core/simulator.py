@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 from functools import cached_property
-from typing import Iterator, Protocol
+from typing import Iterator, Protocol, Sequence
 
 import numpy as np
 
@@ -29,7 +29,9 @@ from repro.core.straggler import StragglerModel, StragglerProfile
 __all__ = [
     "ArrivalEvent",
     "ArrivalStream",
+    "ChurnSchedule",
     "IterationResult",
+    "MembershipEvent",
     "PartitionTimes",
     "RunResult",
     "ClusterSim",
@@ -61,6 +63,45 @@ class ArrivalStream(Protocol):
     decodable moment usually arrives long before the stream ends)."""
 
     def __iter__(self) -> Iterator[ArrivalEvent]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """One simulated cluster-membership change (DESIGN.md §8).
+
+    Attributes:
+      step: training step the event fires at (applied before the step's
+        arrival clocks are sampled, so the new worker set participates
+        immediately).
+      join_speeds: true throughputs of workers joining (appended at indices
+        ``m..m+j−1``).
+      leave: CURRENT worker indices departing (indices as of this event,
+        after all earlier events' compactions).
+      join_c_init: optional calibration estimates for the joiners (the
+        estimator must not see the true speeds).
+    """
+
+    step: int
+    join_speeds: tuple[float, ...] = ()
+    leave: tuple[int, ...] = ()
+    join_c_init: tuple[float, ...] | None = None
+
+
+class ChurnSchedule:
+    """Ordered join/leave events, indexed by training step — the simulated
+    counterpart of a cluster manager's membership feed.  The controller
+    drains ``at(step)`` each iteration; steps without events are free."""
+
+    def __init__(self, events: Sequence[MembershipEvent] = ()):
+        self._by_step: dict[int, list[MembershipEvent]] = {}
+        for ev in sorted(events, key=lambda e: e.step):
+            self._by_step.setdefault(ev.step, []).append(ev)
+
+    def at(self, step: int) -> tuple[MembershipEvent, ...]:
+        return tuple(self._by_step.get(step, ()))
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
 
 
 def theoretical_optimal_time(k: int, s: int, c: np.ndarray) -> float:
@@ -207,6 +248,7 @@ class ClusterSim:
         c: np.ndarray,
         comm_time: float = 0.0,
         wait_for_all: bool = False,
+        churn: "ChurnSchedule | None" = None,
     ):
         from repro.core.registry import GradientCode
 
@@ -222,6 +264,20 @@ class ClusterSim:
             raise ValueError("throughput vector size != m")
         self.comm_time = comm_time
         self.wait_for_all = wait_for_all
+        self.churn = churn
+
+    def membership_events(self, step: int) -> tuple[MembershipEvent, ...]:
+        """Simulated join/leave events firing at ``step`` (empty without a
+        churn schedule) — the auto-path input the ElasticController drains
+        each iteration (DESIGN.md §8)."""
+        return self.churn.at(step) if self.churn is not None else ()
+
+    def set_speeds(self, c: np.ndarray) -> None:
+        """Replace the true-throughput vector after a membership change."""
+        c = np.asarray(c, dtype=np.float64)
+        if c.shape[0] != self.scheme.m:
+            raise ValueError(f"speed vector size {c.shape[0]} != m={self.scheme.m}")
+        self.c = c
 
     @property
     def scheme(self) -> CodingScheme:
@@ -276,7 +332,11 @@ class ClusterSim:
             compute = np.where(rate > 0, loads / np.maximum(rate, 1e-300), np.inf)
         compute = np.where(loads == 0, 0.0, compute)
         finish = compute + profile.extra_delay + self.comm_time
+        return self._resolve_iteration(compute, finish)
 
+    def _resolve_iteration(self, compute: np.ndarray, finish: np.ndarray) -> IterationResult:
+        """Decode + usage accounting for one iteration's (compute, finish)
+        row — the only per-iteration work the batched ``run`` keeps."""
         if self.wait_for_all:
             T = float(np.max(finish))
             used = tuple(range(self.scheme.m))
@@ -293,9 +353,36 @@ class ClusterSim:
             useful, busy = 0.0, float(np.sum(compute[np.isfinite(compute)]))
         return IterationResult(T=T, finish=finish, used=used, useful_compute=useful, busy_compute=busy)
 
+    def finish_matrix(
+        self, profiles: Sequence[StragglerProfile]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized per-worker clocks for a batch of straggler profiles:
+        (n, m) compute seconds and finish times in ONE numpy pass — the
+        whole-run statistics path no longer rebuilds them per iteration in
+        Python.  Elementwise formulas are identical to :meth:`iteration`,
+        so the batched run is bit-equal to the loop (pinned in
+        tests/test_simulator.py)."""
+        loads = self.loads
+        if not len(profiles):
+            empty = np.zeros((0, self.scheme.m), dtype=np.float64)
+            return empty, empty
+        slow = np.stack([p.slowdown for p in profiles])
+        delay = np.stack([p.extra_delay for p in profiles])
+        rate = self.c[None, :] / slow  # inf slowdown -> rate 0
+        with np.errstate(divide="ignore", invalid="ignore"):
+            compute = np.where(rate > 0, loads[None, :] / np.maximum(rate, 1e-300), np.inf)
+        compute = np.where(loads[None, :] == 0, 0.0, compute)
+        finish = compute + delay + self.comm_time
+        return compute, finish
+
     def run(self, model: StragglerModel, n_iters: int, rng: np.random.Generator | int = 0) -> RunResult:
         rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
-        iters = [self.iteration(model.sample(self.scheme.m, rng)) for _ in range(n_iters)]
+        m = self.scheme.m
+        profiles = [model.sample(m, rng) for _ in range(n_iters)]
+        compute, finish = self.finish_matrix(profiles)
+        iters = [
+            self._resolve_iteration(compute[i], finish[i]) for i in range(n_iters)
+        ]
         Ts = np.array([it.T for it in iters])
         ok = np.isfinite(Ts)
         failures = int((~ok).sum())

@@ -83,6 +83,37 @@ class ThroughputEstimator:
         """Call after re-running allocation with the current estimate."""
         self._last_applied = self.normalized()
 
+    def resize(self, old_of_new, init_new=None) -> None:
+        """Membership change: keep retained workers' EWMA state, seed the
+        joiners.  ``old_of_new[i]`` is new worker i's old index (None =
+        joined); ``init_new`` is an optional per-joiner calibration prior —
+        without one a joiner starts at the mean retained estimate (the
+        least-surprising guess; its first observations correct it fast at
+        this EWMA alpha)."""
+        m_new = len(old_of_new)
+        retained = [o for o in old_of_new if o is not None]
+        n_join = sum(1 for o in old_of_new if o is None)
+        default = float(np.mean(self.c[retained])) if retained else 1.0
+        if init_new is not None:
+            init_new = np.asarray(init_new, dtype=np.float64)
+            if init_new.shape != (n_join,):
+                raise ValueError(
+                    f"init_new has {init_new.shape} entries for {n_join} joining workers"
+                )
+        fresh = iter(init_new if init_new is not None else np.full(n_join, default))
+        c = np.empty(m_new, dtype=np.float64)
+        last = np.empty(m_new, dtype=np.float64)
+        for i, o in enumerate(old_of_new):
+            if o is not None:
+                c[i] = self.c[o]
+                last[i] = self._last_applied[o]
+            else:
+                c[i] = next(fresh)
+                last[i] = c[i]
+        self.m = m_new
+        self.c = c
+        self._last_applied = last
+
     # -- checkpoint state ---------------------------------------------------
 
     def state_dict(self) -> dict:
@@ -96,3 +127,5 @@ class ThroughputEstimator:
     def load_state_dict(self, state: dict) -> None:
         self.c = np.asarray(state["c"], dtype=np.float64)
         self._last_applied = np.asarray(state["last_applied"], dtype=np.float64)
+        # the saved run may have crossed a membership transition: m follows c
+        self.m = int(self.c.shape[0])

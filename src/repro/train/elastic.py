@@ -18,11 +18,14 @@ observations) fall out of the same tick/observe pair.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from repro.approx.deadline import DeadlinePolicy, StepTick
 from repro.core.codec import Codec
-from repro.core.simulator import ClusterSim
+from repro.core.registry import MembershipStats
+from repro.core.simulator import ChurnSchedule, ClusterSim
 from repro.core.straggler import StragglerProfile
 from repro.core.throughput import ThroughputEstimator
 
@@ -53,6 +56,7 @@ class ElasticController:
         comm_time: float = 0.0,
         c_init: np.ndarray | None = None,
         policy: DeadlinePolicy | None = None,
+        churn: ChurnSchedule | None = None,
     ):
         m = codec.m
         self.codec = codec
@@ -65,8 +69,22 @@ class ElasticController:
         )
         self.sim = ClusterSim(
             codec.code, self.true_speeds, comm_time=comm_time,
-            wait_for_all=codec.code.wait_for_all,
+            wait_for_all=codec.code.wait_for_all, churn=churn,
         )
+        # highest step whose churn events have been drained: a skipped
+        # iteration leaves state.step unchanged, so the trainer asks about
+        # the same step again and must NOT get the events twice
+        self._churn_drained = -1
+
+    @property
+    def m(self) -> int:
+        return self.codec.m
+
+    @property
+    def membership_epoch(self) -> int:
+        """Transitions applied so far — the code's counter IS the truth
+        (direct ``Codec.remap_members`` callers bump it too)."""
+        return self.codec.code.membership_epoch
 
     def tick(self, profile: StragglerProfile) -> StepTick:
         """One control-plane iteration: per-partition arrival clocks → the
@@ -152,10 +170,122 @@ class ElasticController:
         self.estimator.mark_applied()
         return True
 
+    # -- elastic membership (DESIGN.md §8) -----------------------------------
+
+    def add_workers(
+        self, speeds: Sequence[float], c_init: Sequence[float] | None = None
+    ) -> MembershipStats:
+        """Grow the worker set in place: the joiners (true throughputs
+        ``speeds``, appended at indices ``m..m+j−1``) enter the allocation,
+        B, slot plan, estimator, and simulated clock in one transition.
+        ``c_init`` seeds the estimator for the joiners (calibration pass);
+        without it they start at the mean retained estimate — the estimator
+        never sees the true speeds."""
+        speeds = np.asarray(speeds, dtype=np.float64)
+        if speeds.ndim != 1 or speeds.size == 0:
+            raise ValueError("add_workers needs a non-empty 1-D speed vector")
+        if np.any(speeds <= 0):
+            raise ValueError("true speeds must be positive")
+        old_of_new = list(range(self.m)) + [None] * int(speeds.size)
+        return self._transition(
+            np.concatenate([self.true_speeds, speeds]), old_of_new, c_init
+        )
+
+    def remove_workers(self, ids: Sequence[int]) -> MembershipStats:
+        """Shrink the worker set in place: drop ``ids`` (current indices),
+        compact the survivors (relative order kept), remap the slot plan.
+        Departed load lands on survivors/joiners per the movement bound."""
+        drop = {int(i) for i in ids}
+        if not drop:
+            raise ValueError("remove_workers needs at least one worker id")
+        if any(not 0 <= i < self.m for i in drop):
+            raise ValueError(f"worker ids out of range [0, {self.m}): {sorted(drop)}")
+        old_of_new: list[int | None] = [i for i in range(self.m) if i not in drop]
+        if len(old_of_new) <= self.codec.s:
+            raise ValueError(
+                f"removing {len(drop)} workers leaves m={len(old_of_new)} <= s={self.codec.s}"
+            )
+        return self._transition(self.true_speeds[old_of_new], old_of_new, None)
+
+    def _transition(
+        self,
+        true_speeds_new: np.ndarray,
+        old_of_new: list[int | None],
+        c_init_new: Sequence[float] | None,
+    ) -> MembershipStats:
+        # the transition is atomic: a remap feasibility error (e.g. a user
+        # skew cap that cannot fit the shrunk worker set) must not leave the
+        # estimator resized against an unchanged codec
+        est_snapshot = self.estimator.state_dict()
+        self.estimator.resize(old_of_new, c_init_new)
+        try:
+            stats = self.codec.remap_members(self.estimator.normalized(), old_of_new)
+        except Exception:
+            self.estimator.load_state_dict(est_snapshot)
+            raise
+        self.true_speeds = np.asarray(true_speeds_new, dtype=np.float64)
+        self.sim.set_speeds(self.true_speeds)
+        # the transition re-ran allocation against the current estimate:
+        # that IS an applied rebalance for hysteresis purposes
+        self.estimator.mark_applied()
+        return stats
+
+    def apply_churn(self, step: int) -> MembershipStats | None:
+        """Auto path: drain the ClusterSim's simulated join/leave events for
+        ``step`` and apply them in order.  Returns the LAST transition's
+        stats (None when the step had no events).  Idempotent per step — a
+        skipped iteration re-asks about the same ``step`` and gets None.
+
+        The whole step's event list is validated BEFORE anything mutates:
+        an invalid schedule (e.g. a leave that would drop m below s+1) must
+        raise with the cluster untouched, not half-transitioned — and must
+        not be swallowed as already-drained on a retry."""
+        if step <= self._churn_drained:
+            return None
+        events = self.sim.membership_events(step)
+        m_sim = self.m
+        for ev in events:
+            if ev.leave:
+                drop = {int(i) for i in ev.leave}
+                if len(drop) != len(ev.leave) or any(not 0 <= i < m_sim for i in drop):
+                    raise ValueError(f"step {step}: invalid leave ids {ev.leave} at m={m_sim}")
+                m_sim -= len(drop)
+                if m_sim <= self.codec.s:
+                    raise ValueError(
+                        f"step {step}: leave {ev.leave} would drop m to {m_sim} <= s={self.codec.s}"
+                    )
+            if ev.join_speeds:
+                if any(s <= 0 for s in ev.join_speeds):
+                    raise ValueError(f"step {step}: join speeds must be positive: {ev.join_speeds}")
+                if ev.join_c_init is not None and len(ev.join_c_init) != len(ev.join_speeds):
+                    raise ValueError(
+                        f"step {step}: join_c_init has {len(ev.join_c_init)} entries "
+                        f"for {len(ev.join_speeds)} joining workers"
+                    )
+            m_sim += len(ev.join_speeds)
+        self._churn_drained = step
+        stats: MembershipStats | None = None
+        for ev in events:
+            if ev.leave:
+                stats = self.remove_workers(ev.leave)
+            if ev.join_speeds:
+                stats = self.add_workers(ev.join_speeds, ev.join_c_init)
+        return stats
+
     # -- checkpoint state ---------------------------------------------------
 
     def state_dict(self) -> dict:
-        return {"estimator": self.estimator.state_dict()}
+        # membership_epoch lives in the code's state (restored via the
+        # codec) — one source of truth, nothing to duplicate here
+        return {
+            "estimator": self.estimator.state_dict(),
+            "true_speeds": [float(x) for x in self.true_speeds],
+            "churn_drained": int(self._churn_drained),
+        }
 
     def load_state_dict(self, state: dict) -> None:
         self.estimator.load_state_dict(state["estimator"])
+        if "true_speeds" in state:
+            self.true_speeds = np.asarray(state["true_speeds"], dtype=np.float64)
+            self.sim.set_speeds(self.true_speeds)
+        self._churn_drained = int(state.get("churn_drained", -1))

@@ -149,6 +149,7 @@ class StepEngine:
                 * support_slot_mask_device(sup, pids, mask)
             )
             self._err = None  # per-worker flat error feedback, built lazily
+            self._err_version: int | None = None  # codec.version _err belongs to
             self._unravel = None  # flat (D,) -> params pytree, built lazily
 
     # -- state -------------------------------------------------------------
@@ -195,10 +196,13 @@ class StepEngine:
 
     def _support_dev(self, support: np.ndarray | None) -> jnp.ndarray:
         """(m, k) completion mask as a device array; all-ones when the step
-        has no partial work (same trace either way — no recompiles)."""
+        has no partial work (same trace either way — no recompiles).  Keyed
+        by shape: a membership change (m or structural k moved) rebuilds it
+        instead of feeding the stale-sized mask into a retraced step."""
         if support is None:
-            if self._ones_support is None:
-                self._ones_support = jnp.ones((self.codec.m, self.codec.k), jnp.float32)
+            shape = (self.codec.m, self.codec.k)
+            if self._ones_support is None or self._ones_support.shape != shape:
+                self._ones_support = jnp.ones(shape, jnp.float32)
             return self._ones_support
         return jnp.asarray(np.asarray(support), jnp.float32)
 
@@ -311,10 +315,15 @@ class StepEngine:
                 self._dev_coeff_mask, pids, mask, self._support_dev(support)
             )
         a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
-        if self._unravel is None:
+        if self._unravel is None or self._err_version != self.codec.version:
+            # first call, or a membership change / rebalance re-encoded the
+            # plan: per-worker error feedback keyed to the OLD worker
+            # indices or coefficients must not leak into the new encoding
+            # (shape comparison alone misses a remove+add that restores m)
             flat0, self._unravel = ravel_pytree(params)
             width = int(flat0.size) if self.compress else 1
             self._err = jnp.zeros((self.codec.m, width), jnp.float32)
+            self._err_version = self.codec.version
         flat, self._err = self._spmd_grads(params, sb, coeff, a_dev, self._err)
         return self._unravel(flat)
 

@@ -39,6 +39,8 @@ import numpy as np
 from repro.approx.deadline import DeadlinePolicy
 from repro.configs.base import CodingConfig, TrainConfig
 from repro.core.codec import Codec
+from repro.core.registry import MembershipStats
+from repro.core.simulator import ChurnSchedule
 from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
 from repro.models.lm import LM
 from repro.train.elastic import ElasticController
@@ -74,6 +76,7 @@ class CodedTrainer:
         rng: int = 0,
         backend: str = "fused",
         deadline_policy: DeadlinePolicy | None = None,
+        churn: ChurnSchedule | None = None,
     ):
         self.model = model
         self.coding = coding
@@ -83,6 +86,7 @@ class CodedTrainer:
         self._rng = np.random.default_rng(rng)
         self._steps_taken = 0
         self._exact_steps = 0
+        self._last_membership: MembershipStats | None = None
 
         self.codec = Codec.from_config(coding, m=m, c_init=c_init, rng=rng + 1)
         self.engine = StepEngine(
@@ -92,7 +96,7 @@ class CodedTrainer:
         )
         self.elastic = ElasticController(
             self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init,
-            policy=deadline_policy,
+            policy=deadline_policy, churn=churn,
         )
 
     # convenience views (stable public surface; tests/examples rely on them)
@@ -137,14 +141,66 @@ class CodedTrainer:
     def _exact_fraction(self) -> float:
         return self._exact_steps / max(self._steps_taken, 1)
 
+    def _check_membership_supported(self) -> None:
+        """Membership changes must be rejected BEFORE any state mutates: the
+        spmd backend shards over a fixed device mesh, so an in-place m
+        change would corrupt the wire layout (rebuild path: DESIGN.md §8)."""
+        if self.engine.backend == "spmd":
+            raise NotImplementedError(
+                "the spmd backend shards over a fixed device mesh; in-place "
+                "membership changes need a rebuilt engine/mesh (see DESIGN.md §8)"
+            )
+
+    def apply_membership(self, stats: MembershipStats) -> MembershipStats:
+        """Record an in-place membership transition that the controller just
+        applied: sync the trainer's worker count (straggler sampling, batch
+        sizing)."""
+        self.m = self.elastic.m
+        self._last_membership = stats
+        return stats
+
+    def add_workers(self, speeds, c_init=None) -> MembershipStats:
+        """Manual in-place grow — the controller transition + trainer sync."""
+        self._check_membership_supported()
+        return self.apply_membership(self.elastic.add_workers(speeds, c_init))
+
+    def remove_workers(self, ids) -> MembershipStats:
+        """Manual in-place shrink — the controller transition + trainer sync."""
+        self._check_membership_supported()
+        return self.apply_membership(self.elastic.remove_workers(ids))
+
     def step(
         self, state: TrainerState, partition_batch: dict[str, np.ndarray],
         profile: StragglerProfile | None = None,
     ) -> tuple[TrainerState, dict[str, float]]:
         """One arrival-driven BSP step — exact or deadline semantics are
-        the policy's choice, not a separate code path."""
+        the policy's choice, not a separate code path.  Scheduled join/leave
+        events for this step are applied FIRST, so the new worker set's
+        clocks, decode, and gradients all see the transition."""
+        churn_stats = None
+        if self.elastic.sim.membership_events(state.step):
+            self._check_membership_supported()
+            churn_stats = self.elastic.apply_churn(state.step)
+            if churn_stats is not None:
+                self.apply_membership(churn_stats)
+        # the batch must match the LIVE partition count — structural schemes
+        # (k = m) change k on churn, and a stale batch would silently
+        # misalign partition data under the slot gather
+        batch_k = int(jax.tree.leaves(partition_batch)[0].shape[0])
+        if batch_k != self.k:
+            raise ValueError(
+                f"partition batch has {batch_k} partitions but the codec "
+                f"expects k={self.k} (a membership change on a structural "
+                "scheme resizes k — rebuild batches after churn)"
+            )
         if profile is None:
             profile = self.straggler_model.sample(self.m, self._rng)
+        elif profile.slowdown.shape[0] != self.m:
+            raise ValueError(
+                f"straggler profile sized for {profile.slowdown.shape[0]} workers, "
+                f"but the worker set is m={self.m} (churn applies before the "
+                "profile — resample explicit profiles after membership changes)"
+            )
 
         # --- timing model + decode resolution (what the paper measures) ---
         tick = self.elastic.tick(profile)
@@ -157,9 +213,13 @@ class CodedTrainer:
             "n_stragglers": float(len(profile.straggler_set())),
             "decode_residual": outcome.residual,
             "exact": float(outcome.exact),
+            "membership_epoch": float(self.elastic.membership_epoch),
         }
         if np.isfinite(tick.deadline):
             base["deadline"] = tick.deadline
+        if churn_stats is not None:
+            base["m"] = float(self.m)
+            base["moved_partitions"] = float(churn_stats.moved)
 
         step_it = outcome.n_used > 0 and (
             outcome.exact or self.elastic.policy.step_inexact
@@ -212,5 +272,9 @@ class CodedTrainer:
         self._steps_taken = int(extras["steps_taken"])
         self._exact_steps = int(extras["exact_steps"])
         self._rng.bit_generator.state = extras["trainer_rng_state"]
-        self.elastic.load_state_dict(extras["elastic"])
+        # codec FIRST: a checkpoint taken after a membership transition
+        # restores the resized scheme, and the elastic state (true speeds,
+        # estimator width) must land on the already-resized worker set
         self.codec.load_state_dict(extras["codec"])
+        self.elastic.load_state_dict(extras["elastic"])
+        self.m = self.codec.m

@@ -199,6 +199,52 @@ def check_engine_spmd_inexact():
     print("engine spmd inexact ok")
 
 
+def check_engine_spmd_churn():
+    """Membership-change spmd leg (DESIGN.md §8): the shard_map backend is
+    mesh-pinned, so after an in-place shrink the engine is REBUILT on a mesh
+    matching the new m — its first post-churn gradients must equal the
+    reference oracle on the live (remapped) codec."""
+    import jax.numpy as jnp
+    from repro.configs.base import TrainConfig
+    from repro.core import Codec, get_scheme
+    from repro.train.elastic import ElasticController
+    from repro.train.engine import StepEngine
+
+    class Toy:
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            return {
+                "w1": jax.random.normal(k1, (4, 16), jnp.float32),
+                "w2": jax.random.normal(k2, (16, 1), jnp.float32),
+            }
+
+        def weighted_loss(self, params, batch):
+            pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+            return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+    model = Toy()
+    speeds = np.array([1.0, 2.0, 3.0, 2.0, 1.0, 2.0, 3.0, 2.0])
+    codec = Codec(get_scheme("heter_aware", m=8, k=16, s=1, c=speeds, rng=0))
+    ctl = ElasticController(codec, true_speeds=speeds, c_init=speeds)
+    ctl.remove_workers([1, 3, 5, 7])  # 8 -> 4 workers, slot plan remapped
+    assert codec.m == 4
+
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
+    r = np.random.default_rng(0)
+    pb = {
+        "x": r.normal(size=(codec.k, 2, 4)).astype(np.float32),
+        "y": r.normal(size=(codec.k, 2)).astype(np.float32),
+    }
+    a = codec.decode_vector(range(codec.m))
+    params = model.init(jax.random.PRNGKey(0))
+    tc = TrainConfig()
+    g_spmd = StepEngine(model, tc, codec, backend="spmd", mesh=mesh).gradients(params, pb, a)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    for x, y in zip(jax.tree.leaves(g_spmd), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    print("engine spmd churn ok")
+
+
 def check_dryrun_small():
     """Miniature dry-run: lower+compile a reduced arch on a 4x2 mesh with the
     same code path as launch/dryrun (which needs 512 devices)."""
@@ -255,5 +301,6 @@ if __name__ == "__main__":
         "fused_sharded": check_fused_sharded_equals_host,
         "engine_spmd": check_engine_spmd,
         "engine_spmd_inexact": check_engine_spmd_inexact,
+        "engine_spmd_churn": check_engine_spmd_churn,
         "dryrun_small": check_dryrun_small,
     }[sys.argv[1]]()

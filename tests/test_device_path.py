@@ -181,6 +181,68 @@ def test_plan_cache_invalidated_on_rebalance():
     _tree_close(g_new, g_host, atol=1e-6, rtol=1e-5)
 
 
+def test_membership_change_invalidates_every_device_cache():
+    """An in-place membership change (DESIGN.md §8) must bump Codec.version
+    EXACTLY once and rotate the plan object, so the engine's device-resident
+    plan tensors, the (m, k) all-ones support mask, and the scheme's
+    decode/outcome LRUs all refresh — post-churn grads must match a fresh
+    host-pack engine on the new plan."""
+    from repro.train.elastic import ElasticController
+
+    model = _ToyModel()
+    codec = _codec("heter_aware")
+    ctl = ElasticController(codec, true_speeds=np.array(_C4), c_init=np.array(_C4))
+    eng = StepEngine(model, TrainConfig(), codec, backend="fused")
+    params = model.init(jax.random.PRNGKey(0))
+    eng.gradients(params, _partition_batch(codec.k), codec.decode_vector(range(codec.m)))
+    plan0, v0, ones0 = eng._plan_ref, codec.version, eng._ones_support
+    cache0 = codec.code.decode_cache_info()
+    assert cache0.currsize > 0
+
+    ctl.add_workers([2.5])
+
+    assert codec.version == v0 + 1  # exactly once per transition
+    assert codec.plan is not plan0
+    assert codec.code.decode_cache_info().currsize == 0  # LRU died with old B
+    a = codec.decode_vector(range(codec.m))
+    pb = _partition_batch(codec.k, seed=3)
+    g_new = eng.gradients(params, pb, a)
+    assert eng._plan_ref is codec.plan  # device plan re-uploaded
+    assert eng._ones_support is not ones0  # (m, k) mask resized with m
+    assert eng._ones_support.shape == (codec.m, codec.k)
+    g_host = StepEngine(
+        model, TrainConfig(), codec, backend="fused", host_pack=True
+    ).gradients(params, pb, a)
+    _tree_close(g_new, g_host, atol=1e-6, rtol=1e-5)
+
+
+def test_stale_version_would_be_caught():
+    """Regression guard for the §8 invalidation contract: if remap_members
+    ever stopped bumping Codec.version / rotating the plan object, the
+    engine would keep serving the PRE-churn plan tensors and this test
+    fails — the device pack would disagree with the codec's host pack."""
+    from repro.train.elastic import ElasticController
+
+    codec = _codec("heter_aware")
+    ctl = ElasticController(codec, true_speeds=np.array(_C4), c_init=np.array(_C4))
+    versions = [codec.version]
+    plans = [codec.plan]
+    for transition in (lambda: ctl.add_workers([3.0]), lambda: ctl.remove_workers([0])):
+        transition()
+        versions.append(codec.version)
+        plans.append(codec.plan)
+    # one bump per transition, never zero, never two; plan identity rotates
+    assert versions == [versions[0], versions[0] + 1, versions[0] + 2]
+    assert len({id(p) for p in plans}) == 3
+    # and the plan VALUES actually track the live scheme (stale copy would
+    # index partitions with the old worker set's ids)
+    assert codec.plan.m == codec.m == 4
+    np.testing.assert_array_equal(
+        np.sort(np.unique(codec.plan.slot_pids[codec.plan.slot_mask > 0])),
+        np.arange(codec.k),
+    )
+
+
 # ---------------------------------------------------------------------------
 # flat Pallas encode/decode (interpret mode — CPU CI exercises the kernel)
 # ---------------------------------------------------------------------------

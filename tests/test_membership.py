@@ -1,0 +1,576 @@
+"""In-place elastic membership (DESIGN.md §8) — churn property harness.
+
+The contract under test, across ALL registered schemes and random
+join/leave/speed-drift sequences:
+
+  (a) after EVERY transition the decode invariant holds — for every
+      decodable straggler pattern the decode vector satisfies a·B = 1ᵀ
+      exactly (Tandon et al.'s invariant, the thing a membership remap must
+      never break), and for exact schemes every ≤s pattern IS decodable;
+  (b) Condition 1 (Lemma 1) holds — exhaustive at small C(m, s), sampled
+      above the limit;
+  (c) retained-worker partition movement never exceeds the scheme's
+      documented stability bound (``MembershipStats.bound``);
+  (d) the execution backends stay gradient-equal on the first post-churn
+      step (fused device-pack vs host-pack vs the paper-protocol reference;
+      the spmd leg needs a rebuilt mesh and runs in tests/spmd_driver.py).
+
+Plus the acceptance criteria: a seeded trainer run with scheduled mid-run
+join AND leave events completes with exact semantics, and checkpoint
+resume ACROSS a membership transition is bit-exact.
+
+Tier-2 runs the 50-transition churn soak at m up to 64 (CHURN_SOAK=1).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core import (
+    ChurnSchedule,
+    Codec,
+    MembershipEvent,
+    get_scheme,
+    remap_allocation,
+    satisfies_condition1,
+    scheme_names,
+)
+from repro.core.allocation import allocate, proportional_counts
+from repro.core.straggler import TransientStragglers
+from repro.train.elastic import ElasticController
+from repro.train.engine import StepEngine, TrainerState
+from repro.train.trainer import CodedTrainer
+
+ALL_SCHEMES = sorted(scheme_names())
+
+# per-scheme churn constraints: designed s and the worker-count granularity
+# a transition must respect (FRS needs (s+1) | m)
+_S = {name: (0 if name == "naive" else 1) for name in ALL_SCHEMES}
+_DELTA = {name: (2 if name == "fractional_repetition" else 1) for name in ALL_SCHEMES}
+_MIN_M = {name: max(2, _S[name] + 2, _DELTA[name] * 2) for name in ALL_SCHEMES}
+
+
+def _mk_controller(name, m, rng):
+    s = _S[name]
+    speeds = rng.uniform(1.0, 4.0, m)
+    code = get_scheme(name, m=m, k=2 * m, s=s, c=speeds, rng=int(rng.integers(1 << 30)))
+    codec = Codec(code)
+    return ElasticController(codec, true_speeds=speeds, c_init=speeds)
+
+
+def _assert_decode_invariants(code, max_patterns: int = 200):
+    """(a) + (b): a·B = 1ᵀ for decodable patterns, Condition 1 for the
+    scheme's guaranteed tolerance."""
+    B, m, k = code.B, code.m, code.k
+    s_eff = code.scheme.s  # guaranteed tolerance (0 for bernoulli/naive)
+    ones = np.ones(k)
+    # full availability always decodes exactly, every scheme
+    full = code.decode_outcome(range(m))
+    assert full.exact
+    np.testing.assert_allclose(full.a @ B, ones, atol=1e-8)
+    # single-straggler patterns (and none): decodable ⇒ exact a·B = 1 with
+    # support inside the available set; exact schemes MUST decode ≤s patterns
+    patterns = [()] + [(w,) for w in range(m)] if s_eff >= 1 else [()]
+    for dead in patterns:
+        avail = [w for w in range(m) if w not in dead]
+        outcome = code.decode_outcome(avail)
+        if code.exact and len(dead) <= s_eff:
+            assert outcome.exact, f"≤s pattern undecodable post-churn: dead={dead}"
+        if outcome.exact:
+            np.testing.assert_allclose(outcome.a @ B, ones, atol=1e-8)
+            assert np.all(outcome.a[list(dead)] == 0.0)
+    if code.exact:
+        assert satisfies_condition1(B, s_eff, max_patterns=max_patterns)
+    else:  # bernoulli guarantees tolerance 0: full set must span exactly
+        assert satisfies_condition1(B, 0, max_patterns=max_patterns)
+
+
+def _apply_op(ctl, name, op, rng):
+    """One churn transition; returns its MembershipStats (None for drift)."""
+    delta = _DELTA[name]
+    m = ctl.m
+    if op == "drift" or (op == "leave" and m - delta < _MIN_M[name]):
+        # speed drift: estimator folds a skewed observation; rebalance-capable
+        # schemes re-encode, structural ones must no-op without breaking
+        ctl.estimator.update(
+            np.full(m, 1.0), ctl.codec.code.worker_load() * rng.uniform(0.5, 2.0, m)
+        )
+        if ctl.codec.code.supports_rebalance:
+            ctl.codec.rebalance(ctl.estimator.normalized())
+            ctl.estimator.mark_applied()
+        return None
+    if op == "join":
+        return ctl.add_workers(rng.uniform(1.0, 4.0, delta))
+    ids = rng.choice(m, size=delta, replace=False)
+    return ctl.remove_workers([int(i) for i in ids])
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(st.sampled_from(["join", "leave", "drift"]), min_size=1, max_size=5),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_churn_preserves_decode_invariants(name, ops, seed):
+    rng = np.random.default_rng(seed)
+    ctl = _mk_controller(name, _MIN_M[name] + 2 * _DELTA[name], rng)
+    code = ctl.codec.code
+    versions = [ctl.codec.version]
+    for op in ops:
+        stats = _apply_op(ctl, name, op, rng)
+        _assert_decode_invariants(code)
+        versions.append(ctl.codec.version)
+        if stats is None:
+            continue
+        # (c) movement bound; sizes stay mutually consistent
+        if stats.bound is not None:
+            assert stats.moved <= stats.bound, (stats.moved, stats.bound)
+        assert code.m == stats.m_after == len(ctl.true_speeds)
+        assert ctl.estimator.c.shape == (code.m,)
+        assert ctl.codec.plan.slot_pids.shape[0] == code.m
+        assert max(code.allocation.counts) <= ctl.codec.n_slots
+        # every transition bumps the codec version EXACTLY once
+        assert versions[-1] == versions[-2] + 1
+
+
+def test_condition1_sampled_above_pattern_limit_post_churn():
+    """(b) at scale: s=2, m crossing 24 puts C(m, s) above the sampling
+    limit, so the post-churn Condition-1 check runs the SAMPLED verifier
+    (a sampled failure would still be a definite counterexample)."""
+    import math
+
+    rng = np.random.default_rng(5)
+    m, s = 24, 2
+    speeds = rng.uniform(1.0, 4.0, m)
+    code = get_scheme("heter_aware", m=m, k=2 * m, s=s, c=speeds, rng=3)
+    ctl = ElasticController(Codec(code), true_speeds=speeds, c_init=speeds)
+    ctl.add_workers(rng.uniform(1.0, 4.0, 2))
+    ctl.remove_workers([0, 7, 19])
+    max_patterns = 100
+    assert math.comb(code.m, s) > max_patterns  # really the sampled path
+    assert satisfies_condition1(code.B, s, max_patterns=max_patterns, rng=1)
+    # and sampled ≤s patterns decode exactly through the runtime surface
+    for _ in range(20):
+        dead = rng.choice(code.m, size=s, replace=False)
+        avail = [w for w in range(code.m) if w not in set(int(d) for d in dead)]
+        outcome = code.decode_outcome(avail)
+        assert outcome.exact
+        np.testing.assert_allclose(outcome.a @ code.B, np.ones(code.k), atol=1e-8)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+def test_transition_remaps_are_deterministic_and_stable(name):
+    """Same seed + same churn sequence ⇒ identical B; retained heter-aware
+    workers keep their C column across a join (the incremental rebuild)."""
+    def build():
+        rng = np.random.default_rng(7)
+        ctl = _mk_controller(name, _MIN_M[name] + 2 * _DELTA[name], rng)
+        ctl.add_workers(rng.uniform(1.0, 4.0, _DELTA[name]))
+        ctl.remove_workers(list(range(_DELTA[name])))
+        return ctl
+
+    a, b = build(), build()
+    np.testing.assert_array_equal(a.codec.code.B, b.codec.code.B)
+    assert a.codec.code.allocation.partitions == b.codec.code.allocation.partitions
+
+
+def test_heter_aware_join_keeps_retained_C_columns_and_unchanged_B_columns():
+    rng = np.random.default_rng(0)
+    ctl = _mk_controller("heter_aware", 8, rng)
+    code = ctl.codec.code
+    C_before, B_before = code.scheme.C.copy(), code.B.copy()
+    holders_before = code.allocation.holders_matrix().copy()
+    stats = ctl.add_workers([2.5])
+    # retained workers keep their Alg. 1 C column verbatim
+    np.testing.assert_array_equal(code.scheme.C[:, :8], C_before)
+    # columns whose holder set did not change keep their B values bit-for-bit
+    holders_after = code.allocation.holders_matrix()
+    unchanged = [
+        j for j in range(code.k)
+        if np.array_equal(holders_before[j], holders_after[j])
+    ]
+    assert unchanged, "a 1-worker join must leave some columns untouched"
+    np.testing.assert_array_equal(code.B[:8, unchanged], B_before[:, unchanged])
+    assert stats.changed_columns == code.k - len(unchanged)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=12),
+    st.integers(min_value=1, max_value=2),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_remap_allocation_movement_bound_is_exact(m0, s, seed):
+    """The allocation-layer guarantee in isolation: retained worker i
+    acquires at most max(0, n_new − n_old) copies, every partition ends
+    with exactly s+1 distinct holders."""
+    rng = np.random.default_rng(seed)
+    k = 2 * m0
+    prev = allocate(k, s, rng.uniform(1.0, 4.0, m0))
+    # random transition: drop one worker, add up to two
+    joins = int(rng.integers(0, 3))
+    drop = int(rng.integers(0, m0))
+    old_of_new = [i for i in range(m0) if i != drop] + [None] * joins
+    m_new = len(old_of_new)
+    if m_new <= s:
+        return
+    counts = proportional_counts(k, s, rng.uniform(1.0, 4.0, m_new))
+    res = remap_allocation(prev, counts, old_of_new)
+    alloc = res.allocation
+    assert alloc.counts == tuple(int(x) for x in counts)
+    holders = alloc.holders_matrix()  # validates s+1 DISTINCT holders each
+    assert holders.shape == (k, s + 1)
+    per_worker_moved = [
+        len(set(alloc.partitions[i]) - set(prev.partitions[o]))
+        for i, o in enumerate(old_of_new) if o is not None
+    ]
+    assert sum(per_worker_moved) == res.moved
+    assert res.moved <= res.bound
+    if res.forced_sheds == 0:
+        ideal = sum(
+            max(0, int(counts[i]) - len(prev.partitions[o]))
+            for i, o in enumerate(old_of_new) if o is not None
+        )
+        assert res.moved <= ideal
+
+
+# ---------------------------------------------------------------------------
+# (d) backends stay gradient-equal on the first post-churn step
+# ---------------------------------------------------------------------------
+
+
+class _ToyModel:
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32),
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+def _partition_batch(k, mb=2, d=4, seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "x": r.normal(size=(k, mb, d)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+def _tree_close(ta, tb, atol=3e-5, rtol=3e-4):
+    for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEMES)
+def test_backends_grad_equal_on_first_post_churn_step(name):
+    rng = np.random.default_rng(4)
+    ctl = _mk_controller(name, _MIN_M[name] + 2 * _DELTA[name], rng)
+    codec = ctl.codec
+    model = _ToyModel()
+    tc = TrainConfig()
+    engines = {
+        "dev": StepEngine(model, tc, codec, backend="fused"),
+        "host": StepEngine(model, tc, codec, backend="fused", host_pack=True),
+        "ref": StepEngine(model, tc, codec, backend="reference"),
+    }
+    params = model.init(jax.random.PRNGKey(1))
+    # warm the device-plan caches on the PRE-churn plan, then churn
+    pb = _partition_batch(codec.k, seed=1)
+    engines["dev"].gradients(params, pb, codec.decode_outcome(range(codec.m)))
+    ctl.add_workers(rng.uniform(1.0, 4.0, _DELTA[name]))
+    ctl.remove_workers(list(range(_DELTA[name])))
+    pb = _partition_batch(codec.k, seed=2)
+    outcome = codec.decode_outcome(range(codec.m))
+    g_dev = engines["dev"].gradients(params, pb, outcome)
+    g_host = engines["host"].gradients(params, pb, outcome)
+    g_ref = engines["ref"].gradients(params, pb, outcome)
+    _tree_close(g_dev, g_host, atol=1e-6, rtol=1e-5)
+    _tree_close(g_dev, g_ref)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: seeded trainer run with mid-run join AND leave + bit-exact
+# checkpoint resume across a membership change
+# ---------------------------------------------------------------------------
+
+
+def _data(k, step, mb=2, d=4):
+    r = np.random.default_rng(9000 + step)
+    return {
+        "x": r.normal(size=(k, mb, d)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+def _mk_trainer(scheme="heter_aware", churn=None, rng=3):
+    return CodedTrainer(
+        _ToyModel(),
+        CodingConfig(scheme=scheme, s=1, rebalance_every=3),
+        TrainConfig(lr=1e-2, warmup_steps=2, total_steps=16),
+        m=4, part_mb=2,
+        straggler_model=TransientStragglers(p=0.3),
+        true_speeds=np.array([1.0, 2.0, 3.0, 4.0]),
+        comm_time=0.01, rng=rng, churn=churn,
+    )
+
+
+_CHURN = ChurnSchedule([
+    MembershipEvent(step=2, join_speeds=(2.0, 3.0)),
+    MembershipEvent(step=5, leave=(1, 4)),
+])
+
+
+@pytest.mark.parametrize("scheme", ["heter_aware", "group_based", "partial_work"])
+def test_seeded_run_with_join_and_leave_completes_exactly(scheme):
+    tr = _mk_trainer(scheme, churn=_CHURN)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    epochs, ms = [], []
+    for step in range(8):
+        st, met = tr.step(st, _data(tr.k, step))
+        epochs.append(met["membership_epoch"])
+        ms.append(tr.m)
+        # exact policy: every stepped iteration decoded exactly
+        if not met["skipped"]:
+            assert met["exact"] == 1.0 and met["decode_residual"] == 0.0
+        _assert_decode_invariants(tr.codec.code)
+    assert ms[1] == 4 and ms[2] == 6 and ms[-1] == 4  # join then leave applied
+    assert epochs[-1] == 2.0
+    assert np.isfinite(met["loss"])
+
+
+def test_checkpoint_resume_across_membership_change_is_bit_exact():
+    N, split = 8, 4  # split lands between the join (step 2) and leave (step 5)
+    tr_a = _mk_trainer(churn=_CHURN)
+    s_a = tr_a.init_state(jax.random.PRNGKey(0))
+    for step in range(N):
+        s_a, _ = tr_a.step(s_a, _data(tr_a.k, step))
+    assert tr_a.elastic.membership_epoch == 2
+
+    tr_b = _mk_trainer(churn=_CHURN)
+    s_b = tr_b.init_state(jax.random.PRNGKey(0))
+    for step in range(split):
+        s_b, _ = tr_b.step(s_b, _data(tr_b.k, step))
+    assert tr_b.m == 6  # the checkpoint really crosses a transition
+    extras = json.loads(json.dumps(tr_b.state_extras()))  # manifest round-trip
+
+    tr_c = _mk_trainer(churn=_CHURN)  # fresh trainer at the ORIGINAL m=4
+    tr_c.load_state_extras(extras)
+    assert tr_c.m == 6  # restore resized the runtime in place
+    s_c = TrainerState(params=s_b.params, opt=s_b.opt, step=split)
+    for step in range(split, N):
+        s_c, _ = tr_c.step(s_c, _data(tr_c.k, step))
+
+    assert s_c.step == s_a.step
+    for x, y in zip(jax.tree.leaves(s_a.params), jax.tree.leaves(s_c.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(tr_a.codec.code.B, tr_c.codec.code.B)
+    np.testing.assert_array_equal(tr_a.elastic.estimator.c, tr_c.elastic.estimator.c)
+    assert tr_a.codec.version == tr_c.codec.version
+    assert tr_a.m == tr_c.m
+    assert tr_a.elastic.membership_epoch == tr_c.elastic.membership_epoch
+
+
+def test_churn_not_reapplied_when_the_churn_step_skips():
+    """A skipped iteration leaves state.step unchanged, so the trainer asks
+    the controller about the same step again — the join must apply ONCE
+    (regression: m used to grow on every retry of the skipped step)."""
+    from repro.core.straggler import StragglerProfile
+
+    churn = ChurnSchedule([MembershipEvent(step=0, join_speeds=(2.0,))])
+    tr = _mk_trainer(churn=churn)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    # profile sized for the POST-churn worker set, 3 dead of 5 (s=1):
+    # undecodable in exact mode -> the iteration skips, step stays 0
+    dead = np.array([1.0, np.inf, np.inf, np.inf, 1.0])
+    st, met = tr.step(st, _data(tr.k, 0), profile=StragglerProfile(dead, np.zeros(5)))
+    assert met["skipped"] == 1.0 and st.step == 0
+    assert tr.m == 5 and tr.elastic.membership_epoch == 1
+    st, met = tr.step(st, _data(tr.k, 0))
+    assert tr.m == 5 and tr.elastic.membership_epoch == 1  # not re-applied
+
+
+def test_invalid_churn_schedule_raises_before_mutating():
+    """A bad event list (leave below s+1) must fail with the cluster
+    UNTOUCHED — not half-transitioned, and not swallowed as already-drained
+    on a retry."""
+    rng = np.random.default_rng(0)
+    ctl = _mk_controller("heter_aware", 4, rng)
+    ctl.sim.churn = ChurnSchedule([
+        MembershipEvent(step=1, leave=(3,)),                  # valid...
+        MembershipEvent(step=1, leave=(0, 1)),                # ...then fatal: 3-2=1 <= s
+    ])
+    B0 = ctl.codec.code.B.copy()
+    with pytest.raises(ValueError, match="would drop m"):
+        ctl.apply_churn(1)
+    # the valid first event must NOT have been applied either
+    assert ctl.m == 4 and ctl.membership_epoch == 0
+    np.testing.assert_array_equal(ctl.codec.code.B, B0)  # nothing mutated
+    with pytest.raises(ValueError):  # retry raises again, not None
+        ctl.apply_churn(1)
+
+
+def test_caller_max_load_survives_membership_transitions():
+    """A tighter caller-imposed skew cap must keep bounding the water-fill
+    after grow/shrink (remap_members may only LOWER max_load, like
+    __init__)."""
+    speeds = [1.0, 2.0, 3.0, 2.0, 1.0, 2.0, 3.0, 2.0]
+    code = get_scheme("heter_aware", m=8, k=16, s=1, c=speeds, rng=0, max_load=5)
+    codec = Codec(code)
+    ctl = ElasticController(codec, true_speeds=np.array(speeds), c_init=np.array(speeds))
+    assert code.max_load == 5
+    ctl.add_workers([4.0])
+    assert code.max_load <= 5
+    assert max(code.allocation.counts) <= 5
+    ctl.remove_workers([8])
+    assert max(code.allocation.counts) <= 5
+
+
+def test_stale_k_batch_rejected_after_structural_churn():
+    """Structural schemes resize k on churn; feeding the pre-churn batch
+    would silently misalign partition data — it must be rejected."""
+    churn = ChurnSchedule([MembershipEvent(step=0, leave=(0,))])
+    tr = _mk_trainer("cyclic", churn=churn)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    stale = _data(tr.k, 0)  # built for k=4; churn shrinks k to 3
+    with pytest.raises(ValueError, match="rebuild batches after churn"):
+        tr.step(st, stale)
+    assert tr.k == 3
+    st, met = tr.step(st, _data(tr.k, 0))  # right-sized batch proceeds
+    assert met["membership_epoch"] == 1.0
+
+
+def test_invalid_join_in_churn_event_rejected_before_any_mutation():
+    """Pre-validation covers joins too: a leave+bad-join event must not
+    half-apply the leave and then swallow the join on retry."""
+    rng = np.random.default_rng(0)
+    ctl = _mk_controller("heter_aware", 5, rng)
+    ctl.sim.churn = ChurnSchedule([
+        MembershipEvent(step=2, leave=(0,), join_speeds=(0.0,)),
+    ])
+    with pytest.raises(ValueError, match="must be positive"):
+        ctl.apply_churn(2)
+    assert ctl.m == 5 and ctl.membership_epoch == 0  # leave NOT applied
+    ctl.sim.churn = ChurnSchedule([
+        MembershipEvent(step=3, join_speeds=(2.0, 3.0), join_c_init=(1.5,)),
+    ])
+    with pytest.raises(ValueError, match="join_c_init"):
+        ctl.apply_churn(3)
+    assert ctl.m == 5
+
+
+def test_infeasible_transition_is_atomic():
+    """A remap the user's skew cap cannot satisfy raises and leaves the
+    controller fully consistent (estimator width, codec, max_load)."""
+    speeds = np.full(7, 2.0)
+    code = get_scheme("heter_aware", m=7, k=10, s=1, c=speeds, rng=0, max_load=3)
+    codec = Codec(code)
+    ctl = ElasticController(codec, true_speeds=speeds, c_init=speeds)
+    cap_before = code.max_load
+    with pytest.raises(ValueError, match="cannot fit"):
+        ctl.remove_workers([0])  # k(s+1)=20 > 6*3 under the user cap
+    assert codec.m == 7
+    assert ctl.estimator.m == 7 and ctl.estimator.c.shape == (7,)
+    assert code.max_load == cap_before
+    # the cluster still works: a feasible transition succeeds afterwards
+    ctl.add_workers([2.0])
+    assert codec.m == 8 and max(code.allocation.counts) <= 3
+
+
+def test_stale_sized_explicit_profile_is_rejected():
+    churn = ChurnSchedule([MembershipEvent(step=0, join_speeds=(2.0,))])
+    tr = _mk_trainer(churn=churn)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    from repro.core.straggler import StragglerProfile
+
+    with pytest.raises(ValueError, match="resample explicit profiles"):
+        tr.step(st, _data(tr.k, 0), profile=StragglerProfile(np.ones(4), np.zeros(4)))
+
+
+def test_rollback_restore_across_membership_transition():
+    """Loading a PRE-churn checkpoint into a POST-churn codec (rollback)
+    must restore the original worker set, not trip the §4 shape assert."""
+    rng = np.random.default_rng(2)
+    ctl = _mk_controller("heter_aware", 6, rng)
+    codec = ctl.codec
+    saved = json.loads(json.dumps(codec.state_dict()))
+    B0 = codec.code.B.copy()
+    ctl.add_workers([2.0, 3.0])
+    assert codec.m == 8
+    codec.load_state_dict(saved)
+    assert codec.m == 6
+    np.testing.assert_array_equal(codec.code.B, B0)
+
+
+def test_legacy_checkpoint_format_still_restores():
+    """Pre-§8 code state ({c, build_rng_state}) replays the build — old
+    checkpoints keep working after the explicit-scheme format change."""
+    import copy as _copy
+
+    code = get_scheme("heter_aware", m=4, k=8, s=1, c=[1.0, 2.0, 3.0, 2.0], rng=0)
+    legacy = {
+        "c": [float(x) for x in code.c],
+        "build_rng_state": _copy.deepcopy(code._build_rng_state),
+    }
+    fresh = get_scheme("heter_aware", m=4, k=8, s=1, c=[1.0, 1.0, 1.0, 1.0], rng=99)
+    fresh.load_state_dict(legacy)
+    np.testing.assert_array_equal(fresh.B, code.B)
+
+
+def test_spmd_backend_rejects_in_place_membership():
+    """The spmd backend shards over a fixed mesh: an in-place m change must
+    fail loudly, not corrupt the wire layout (rebuild path: spmd_driver)."""
+    tr = _mk_trainer()
+    tr.engine.backend = "spmd"  # simulate without needing a mesh
+    with pytest.raises(NotImplementedError):
+        tr.add_workers([2.0])
+
+
+# ---------------------------------------------------------------------------
+# tier-2 churn soak: 50 random transitions, m drifting up to 64
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    os.environ.get("CHURN_SOAK", "0") != "1",
+    reason="tier-2 soak (set CHURN_SOAK=1; wired into scripts/test.sh)",
+)
+@pytest.mark.parametrize("name", ["heter_aware", "group_based", "bernoulli"])
+def test_churn_soak_50_transitions_up_to_m64(name):
+    rng = np.random.default_rng(11)
+    ctl = _mk_controller(name, 16, rng)
+    code = ctl.codec.code
+    transitions = 0
+    while transitions < 50:
+        m = ctl.m
+        grow = m < 8 or (m < 64 and rng.uniform() < 0.55)
+        if grow:
+            stats = ctl.add_workers(rng.uniform(1.0, 4.0, int(rng.integers(1, 5))))
+        else:
+            ids = rng.choice(m, size=int(rng.integers(1, min(4, m - 4))), replace=False)
+            stats = ctl.remove_workers([int(i) for i in ids])
+        transitions += 1
+        assert stats.bound is None or stats.moved <= stats.bound
+        assert max(code.allocation.counts) <= ctl.codec.n_slots
+        # cheap invariants every step; full decode sweep every 10th
+        full = code.decode_outcome(range(code.m))
+        assert full.exact
+        np.testing.assert_allclose(full.a @ code.B, np.ones(code.k), atol=1e-8)
+        if transitions % 10 == 0:
+            _assert_decode_invariants(code, max_patterns=100)
+    assert ctl.membership_epoch == 50

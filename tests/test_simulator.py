@@ -5,8 +5,10 @@ import pytest
 
 from repro.core import (
     ClusterSim,
+    ComposedModel,
     FixedDelayStragglers,
     NoStragglers,
+    TransientStragglers,
     build_cyclic,
     build_heter_aware,
     build_naive,
@@ -76,6 +78,48 @@ def test_resource_usage_ordering():
     assert runs["heter_aware"].resource_usage > runs["cyclic"].resource_usage
     assert runs["heter_aware"].resource_usage > runs["naive"].resource_usage
     assert runs["group_based"].resource_usage > runs["naive"].resource_usage
+
+
+def test_vectorized_run_matches_iteration_loop_1k():
+    """ClusterSim.run batches profile clocks into one vectorized finish
+    matrix (ROADMAP item); it must be BIT-equal to the per-iteration python
+    loop on a seeded 1k-iteration sweep — same RNG stream, same stats."""
+    c = np.array([1.0, 2.0, 3.0, 4.0, 4.0, 2.0])
+    sch = build_heter_aware(12, 1, c, rng=0)
+    model = ComposedModel((TransientStragglers(p=0.2), FixedDelayStragglers(1, 0.5)))
+    n = 1000
+
+    vec = ClusterSim(sch, c, comm_time=0.003).run(model, n, rng=42)
+
+    # oracle: the old per-iteration path — one profile, one iteration() call
+    sim = ClusterSim(sch, c, comm_time=0.003)
+    rng = np.random.default_rng(42)
+    iters = [sim.iteration(model.sample(sch.m, rng)) for _ in range(n)]
+    assert len(vec.iters) == n
+    for a, b in zip(vec.iters, iters):
+        assert a.T == b.T
+        np.testing.assert_array_equal(a.finish, b.finish)
+        assert a.used == b.used
+        assert a.useful_compute == b.useful_compute
+        assert a.busy_compute == b.busy_compute
+    Ts = np.array([it.T for it in iters])
+    ok = np.isfinite(Ts)
+    assert vec.failures == int((~ok).sum())
+    assert vec.mean_T == float(Ts[ok].mean())
+    assert vec.p50_T == float(np.percentile(Ts[ok], 50))
+    assert vec.p99_T == float(np.percentile(Ts[ok], 99))
+
+
+def test_vectorized_finish_matrix_handles_faults_and_empty():
+    c = np.array([1.0, 2.0, 3.0])
+    sch = build_naive(3)
+    sim = ClusterSim(sch, c, comm_time=0.01, wait_for_all=True)
+    # a dead worker makes T = max(finish) = inf: every iteration fails, and
+    # the batched path must propagate the infs exactly like the loop did
+    res = sim.run(FixedDelayStragglers(1, np.inf), 5, rng=0)
+    assert res.failures == 5
+    compute, finish = sim.finish_matrix([])
+    assert compute.shape == (0, 3) and finish.shape == (0, 3)
 
 
 def test_group_based_robust_to_misestimation():

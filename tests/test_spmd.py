@@ -34,5 +34,9 @@ def test_engine_spmd_backend_matches_reference_inexact():
     _run("engine_spmd_inexact")
 
 
+def test_engine_spmd_backend_matches_reference_after_membership_change():
+    _run("engine_spmd_churn")
+
+
 def test_dryrun_lowering_small_mesh():
     _run("dryrun_small")
