@@ -2,7 +2,7 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast test-tier2 test-membership churn-soak bench bench-smoke bench-scaling quickstart
+.PHONY: test test-fast test-tier2 test-membership churn-soak bench bench-smoke bench-scaling bench-serving quickstart
 
 test:
 	./scripts/test.sh
@@ -27,6 +27,9 @@ bench-smoke:  ## CI-speed benchmark smoke: all sections incl. fig6, shrunk iters
 
 bench-scaling:  ## large-m control-plane gate: m in {20,64,256} x schemes; fails if the m=256 budget is blown
 	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/scaling.py
+
+bench-serving:  ## coded-serving gate: decode micro + p99-TTFT >= 1.3x over wait-for-all at 30% stragglers
+	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/serving.py
 
 quickstart:
 	PYTHONPATH=src python examples/quickstart.py

@@ -21,7 +21,7 @@ def _fast() -> bool:
 
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
-    from benchmarks import fig6_approx, kernels_bench, roofline_table, scaling, steptime
+    from benchmarks import fig6_approx, kernels_bench, roofline_table, scaling, serving, steptime
 
     t0 = time.time()
     all_rows = []
@@ -98,6 +98,14 @@ def main() -> None:
     claims = scaling.membership_claims(rows)
     all_rows += rows
     summary.append(("membership", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
+    # --- coded serving: decode micro + SLO tail-latency gate (DESIGN.md §9) ---
+    t = time.time()
+    rows = serving.run()
+    claims = serving.derived_claims(rows)
+    all_rows += rows
+    summary.append(("serving", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- kernels ---

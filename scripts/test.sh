@@ -13,4 +13,6 @@ if [[ "${RUN_TIER2:-0}" == "1" ]]; then
   make bench-scaling
   echo "== tier-2: membership churn soak (50 transitions, m up to 64) =="
   make churn-soak
+  echo "== tier-2: coded-serving gate (BENCH_FAST=1 benchmarks/serving.py) =="
+  make bench-serving
 fi

@@ -24,6 +24,14 @@ The deadline itself *adapts*: unless pinned via ``deadline_s``, it is
 exact decode — so as the estimator converges on the true speeds, the
 deadline tightens around the genuinely achievable iteration time.
 
+The policy is not gradient-specific: ``resolve`` consumes any
+(:class:`GradientCode`, :class:`PartitionTimes`) pair, so the same machinery
+prices *serving* — coded prefill shares across heterogeneous replicas — as a
+tail-latency SLO policy (DESIGN.md §9).  :meth:`DeadlinePolicy.for_slo`
+builds the serving-facing instance (answer from the first decodable replica
+subset, capped by a TTFT deadline) and :data:`SLOPolicy` is the
+serving-facing name of the class.
+
 Resolution is arrival-driven (DESIGN.md §7): all-or-nothing schemes stream
 whole-worker completion events through an incremental
 :class:`~repro.core.decoding.DecodableSetTracker` — O(rank·k) per event, a
@@ -44,7 +52,7 @@ from repro.core.decoding import DecodableSetTracker, DecodeError, DecodeOutcome
 from repro.core.registry import GradientCode
 from repro.core.simulator import PartitionTimes
 
-__all__ = ["DEADLINE_MODES", "DeadlinePolicy", "StepTick", "DeadlineTick"]
+__all__ = ["DEADLINE_MODES", "DeadlinePolicy", "SLOPolicy", "StepTick", "DeadlineTick"]
 
 DEADLINE_MODES = ("exact_first", "bounded_residual", "fixed_deadline")
 
@@ -127,6 +135,32 @@ class DeadlinePolicy:
         earliest exact-decodable moment, never time out, never step an
         inexact outcome."""
         return cls(mode="exact_first", deadline_s=np.inf, step_inexact=False)
+
+    @classmethod
+    def for_slo(
+        cls,
+        mode: str = "exact_first",
+        *,
+        ttft_slo_s: float | None = None,
+        target_residual: float = 0.0,
+        slack: float = 1.5,
+    ) -> "DeadlinePolicy":
+        """Tail-latency SLO policy for coded serving (DESIGN.md §9): answer
+        a request from the first decodable replica subset; if none decodes
+        by the TTFT deadline, answer best-effort from whatever arrived.
+
+        ``ttft_slo_s`` pins the deadline to an absolute time-to-first-token
+        budget; None adapts it (``slack ×`` the predicted exact-decode
+        instant), tightening the tail as replica-speed estimates converge —
+        identical semantics to the training deadline, with "step the
+        iteration" reread as "answer the request"."""
+        return cls(
+            mode=mode,
+            target_residual=target_residual,
+            slack=slack,
+            deadline_s=ttft_slo_s,
+            step_inexact=True,
+        )
 
     # -- deadline adaptation -----------------------------------------------
 
@@ -245,3 +279,9 @@ class DeadlinePolicy:
             # so the last event's (already solved) outcome IS the deadline's
             return deadline, last, None
         return deadline, self._outcome_at(code, ptimes, deadline), None
+
+
+# serving-facing alias (DESIGN.md §9): a tail-latency SLO policy over coded
+# replica arrivals is the same object as a deadline policy over coded worker
+# arrivals — construct via DeadlinePolicy.for_slo().
+SLOPolicy = DeadlinePolicy

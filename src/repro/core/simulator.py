@@ -317,6 +317,16 @@ class ClusterSim:
             k=scheme.k,
         )
 
+    def sample_partition_times(
+        self, model: StragglerModel, rng: np.random.Generator | int = 0
+    ) -> PartitionTimes:
+        """One iteration's (or, in coded serving, one *request's*) arrival
+        clocks under a freshly sampled straggler realization — the
+        per-request replica-latency stream the serving engine consumes
+        (DESIGN.md §9)."""
+        rng = np.random.default_rng(rng) if not isinstance(rng, np.random.Generator) else rng
+        return self.partition_times(model.sample(self.scheme.m, rng))
+
     def arrival_stream(
         self, profile: StragglerProfile, deadline: float = np.inf
     ) -> Iterator[ArrivalEvent]:

@@ -161,7 +161,8 @@ def attention_decode(
     rope_theta: float,
     window: int | None = None,
 ) -> tuple[jnp.ndarray, PyTree]:
-    """One-token decode. x: (B, 1, d); pos: scalar int32 (current position).
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (shared position)
+    or (B,) int32 (slot-indexed serving: each batch row at its own position).
 
     cache["k"/"v"]: (B, S_cache, K, hd) — S_cache is the ring size for SWA
     archs and the max sequence length otherwise.
@@ -169,25 +170,32 @@ def attention_decode(
     B = x.shape[0]
     G = n_heads // n_kv
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
-    posb = jnp.broadcast_to(pos[None], (B, 1))
+    posb = pos[:, None] if pos.ndim else jnp.broadcast_to(pos[None], (B, 1))
     q = apply_rope(q, posb, rotary_dim=rotary_dim, theta=rope_theta)
     k = apply_rope(k, posb, rotary_dim=rotary_dim, theta=rope_theta)
 
     S_c = cache["k"].shape[1]
     slot = pos % S_c if window is not None else pos
-    kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if pos.ndim:
+        # per-row scatter: row b writes its own slot[b] (continuous batching)
+        kc = cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+        vc = cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+    else:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
 
     qh = q.reshape(B, 1, n_kv, G, head_dim) * (head_dim**-0.5)
     s = _gqa_scores(qh, kc)  # (B, K, G, 1, S_c)
     idx = jnp.arange(S_c)
+    pcol = pos[:, None] if pos.ndim else pos  # (B,1) or scalar — broadcasts
     if window is not None:
         # ring size == window: before wrap, slot i holds position i (valid iff
         # i <= pos); after wrap every slot holds one of the last S_c positions.
-        valid = (idx <= pos) | (pos >= S_c)
+        valid = (idx <= pcol) | (pcol >= S_c)
     else:
-        valid = idx <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid = idx <= pcol
+    valid = jnp.broadcast_to(valid, (B, S_c)) if valid.ndim == 2 else valid[None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = _gqa_out(p, vc) @ params["wo"]
     return out, {"k": kc, "v": vc}

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Any
 
 import jax
@@ -281,15 +282,66 @@ class LM:
         return logits, {"layers": caches, "pos": jnp.asarray(x.shape[1], jnp.int32)}
 
     def decode_step(self, params: PyTree, tokens: jnp.ndarray, cache: PyTree) -> tuple[jnp.ndarray, PyTree]:
-        """One token.  tokens: (B, 1) int32.  Returns (logits (B, V), cache)."""
+        """One token.  tokens: (B, 1) int32.  Returns (logits (B, V), cache).
+
+        ``cache["pos"]`` may be a scalar (all rows at the same position — the
+        classic batched path) or an (B,) vector (slot-indexed continuous
+        batching: each row decodes at its own position).
+        """
         x = jnp.take(params["embed"], tokens, axis=0) if "embed" in params else tokens
         pos = cache["pos"]
-        positions = pos[None].astype(jnp.int32)
+        positions = jnp.atleast_1d(pos).astype(jnp.int32)
         x, _, new_caches = self._run_stack(
             params, x, positions, "decode", caches=cache["layers"], pos_scalar=pos
         )
         x = rms_norm(x, params["final_norm"]["scale"], self.cfg.norm_eps)
         return self._logits(params, x[:, 0]), {"layers": new_caches, "pos": pos + 1}
+
+    # ------------------------------------------------------------------
+    # slot-indexed cache ops (continuous-batching serving, DESIGN.md §9)
+    # ------------------------------------------------------------------
+
+    def empty_slot_cache(self, params: PyTree, n_slots: int, cache_len: int) -> PyTree:
+        """Zeroed decode cache for ``n_slots`` independent requests with a
+        per-slot ``pos`` vector.  Shapes come from ``eval_shape`` on prefill,
+        so every family (KV ring, SSM state, conv ring) is covered without
+        enumerating cache layouts here."""
+        if self.cfg.encoder_only:
+            raise ValueError(f"{self.cfg.name} is encoder-only; no decode cache")
+        dummy = {"tokens": jnp.zeros((n_slots, 1), jnp.int32)}
+        if self.cfg.frontend == "vision":
+            dummy["patches"] = jnp.zeros(
+                (n_slots, self.cfg.n_patches, self.cfg.d_model), jnp.float32
+            )
+        _, cache_shape = jax.eval_shape(
+            partial(self.prefill, cache_len=cache_len), params, dummy
+        )
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_shape)
+        return {"layers": cache["layers"], "pos": jnp.zeros((n_slots,), jnp.int32)}
+
+    @staticmethod
+    def cache_insert_slot(batch_cache: PyTree, req_cache: PyTree, slot: jnp.ndarray) -> PyTree:
+        """Write a single-request prefill cache (batch dim 1) into ``slot``
+        of a slot cache — the op that lets a new request join a running
+        decode batch without retracing.  Layer leaves are scan-stacked
+        (n_rep, B, ...), so the batch dim is axis 1."""
+        layers = jax.tree.map(
+            lambda big, one: big.at[:, slot].set(one[:, 0].astype(big.dtype)),
+            batch_cache["layers"], req_cache["layers"],
+        )
+        pos = batch_cache["pos"].at[slot].set(req_cache["pos"].astype(jnp.int32))
+        return {"layers": layers, "pos": pos}
+
+    @staticmethod
+    def cache_evict_slot(batch_cache: PyTree, slot: jnp.ndarray) -> PyTree:
+        """Zero one slot (finished/cancelled request).  Decode math never
+        reads an inactive slot's values (its outputs are masked), but a zero
+        slot keeps stale state from leaking NaN/Inf into reductions."""
+        layers = jax.tree.map(
+            lambda big: big.at[:, slot].set(jnp.zeros_like(big[:, slot])),
+            batch_cache["layers"],
+        )
+        return {"layers": layers, "pos": batch_cache["pos"].at[slot].set(0)}
 
     # ------------------------------------------------------------------
     # sharding

@@ -1,14 +1,23 @@
-"""Batched serving: jitted prefill + decode loop with KV/SSM caches.
+"""Single-replica serving backend: jitted prefill + decode loop over KV/SSM
+caches.
 
-Gradient coding is a training-time technique; serving exists because the
-assigned shape grid includes prefill/decode cells, and because a framework
-that trains models should also be able to run them.  ``LMServer.generate``
-drives greedy decoding over a batch of (padded) requests.
+``LMServer`` is the *compute* half of serving: greedy decoding over a batch
+of (padded) requests, one replica, no scheduling.  The continuous-batching,
+straggler-tolerant engine in :mod:`repro.serve` composes LMServers — it uses
+the same jitted ``prefill``/``decode`` entry points per request slot and
+layers admission control + coded-prefill SLO policies on top (DESIGN.md §9).
+
+Termination is per-request: a row stops at its ``eos_id``, at its own
+``max_new_per_request`` budget, or at the global ``max_new_tokens`` cap —
+finished rows emit ``pad_id`` while the rest of the batch keeps decoding.
+The decode loop itself is a ``jax.lax.scan`` (HLO size and compile time flat
+in ``max_new_tokens``); the pre-scan Python loop survives as
+``use_scan=False`` and is pinned bit-equal in tests/test_serving.py.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Any
 
 import jax
@@ -19,31 +28,151 @@ from repro.models.lm import LM
 
 PyTree = Any
 
+_NO_EOS = -1  # sentinel: token ids are >= 0, so -1 never matches
+
 
 class LMServer:
-    def __init__(self, model: LM):
+    """One replica's serving surface.
+
+    Args:
+      model: a decode-capable :class:`~repro.models.lm.LM`.
+      max_cache_len: hard cap on the decode cache length (the "model max
+        sequence length" for serving purposes).  ``generate`` clamps its
+        default ``cache_len = S + max_new_tokens`` to this and truncates the
+        decode budget accordingly instead of overrunning the cache.
+    """
+
+    def __init__(self, model: LM, max_cache_len: int | None = None):
         if model.cfg.encoder_only:
             raise ValueError(f"{model.cfg.name} is encoder-only; no decode step")
         self.model = model
+        self.max_cache_len = max_cache_len
         self._prefill = jax.jit(model.prefill, static_argnames=("cache_len",))
         self._decode = jax.jit(model.decode_step)
+        self._scan = jax.jit(self._scan_generate, static_argnames=("steps",))
 
-    def generate(
-        self, params: PyTree, batch: PyTree, max_new_tokens: int,
-        cache_len: int | None = None,
-    ) -> np.ndarray:
-        """Greedy decode.  batch: model inputs (tokens (B, S) etc.).
-        Returns (B, max_new_tokens) int32."""
-        S = batch["tokens"].shape[1] if "tokens" in batch else batch["frames"].shape[1]
-        cache_len = cache_len or (S + max_new_tokens)
-        logits, cache = self._prefill(params, batch, cache_len=cache_len)
-        # accumulate tokens ON DEVICE: a np.asarray per decoded token would
-        # force a blocking host sync each step, serializing the async decode
-        # dispatch; one stacked transfer at the end keeps the loop enqueued
+    # -- cache-length policy -------------------------------------------------
+
+    def _needs_full_cache(self) -> bool:
+        """True when some layer keeps a full-length KV cache (positions may
+        not exceed ``cache_len``).  SWA rings and SSM state are O(1)/O(window)
+        and never overrun."""
+        return (
+            any(spec.mixer == "attn" for spec in self.model.plan)
+            and self.model.cfg.window is None
+        )
+
+    def resolve_lengths(
+        self, S: int, max_new_tokens: int, cache_len: int | None
+    ) -> tuple[int, int]:
+        """(cache_len, decode_steps) with the cache-overrun guard applied."""
+        if cache_len is None:
+            cache_len = S + max_new_tokens
+            if self.max_cache_len is not None:
+                cache_len = min(cache_len, self.max_cache_len)
+        if S > cache_len:
+            raise ValueError(f"prompt length {S} exceeds cache_len {cache_len}")
+        steps = max_new_tokens
+        if self._needs_full_cache() and S + steps > cache_len:
+            steps = cache_len - S
+            warnings.warn(
+                f"decode budget truncated to {steps} tokens: S={S} + "
+                f"max_new_tokens={max_new_tokens} exceeds cache_len={cache_len}",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+        return cache_len, steps
+
+    # -- decode loops --------------------------------------------------------
+
+    def _scan_generate(
+        self,
+        params: PyTree,
+        logits0: jnp.ndarray,
+        cache: PyTree,
+        limits: jnp.ndarray,  # (B,) int32 per-request new-token budgets
+        eos_id: jnp.ndarray,  # () int32, _NO_EOS disables
+        pad_id: jnp.ndarray,  # () int32
+        *,
+        steps: int,
+    ) -> jnp.ndarray:
+        """Greedy decode as one ``lax.scan``: batch-size or length changes
+        re-jit a single compact loop body instead of re-unrolling
+        ``max_new_tokens`` Python-level decode calls."""
+        B = logits0.shape[0]
+        tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)[:, None]
+        finished0 = jnp.zeros((B,), bool)
+
+        def body(carry, i):
+            tok, cache, finished = carry
+            emit = jnp.where(finished, pad_id, tok[:, 0])
+            finished = finished | (emit == eos_id) | (i + 1 >= limits)
+            logits, cache = self.model.decode_step(params, tok, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, cache, finished), emit
+
+        (_, _, _), outs = jax.lax.scan(
+            body, (tok0, cache, finished0), jnp.arange(steps, dtype=jnp.int32)
+        )
+        return outs.T  # (B, steps)
+
+    def _python_generate(
+        self, params: PyTree, logits0: jnp.ndarray, cache: PyTree,
+        limits: jnp.ndarray, eos_id: int, pad_id: int, steps: int,
+    ) -> jnp.ndarray:
+        """The original Python-level loop — the oracle the scan path is
+        tested against.  Tokens accumulate on device; one host transfer at
+        the end keeps the loop enqueued (no per-token sync)."""
+        B = logits0.shape[0]
+        tok = jnp.argmax(logits0, axis=-1).astype(jnp.int32)[:, None]
+        finished = jnp.zeros((B,), bool)
         outs = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        for _ in range(max_new_tokens):
-            outs.append(tok[:, 0])
+        for i in range(steps):
+            emit = jnp.where(finished, pad_id, tok[:, 0])
+            outs.append(emit)
+            finished = finished | (emit == eos_id) | (i + 1 >= limits)
             logits, cache = self._decode(params, tok, cache)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return np.asarray(jnp.stack(outs, axis=1))
+        return jnp.stack(outs, axis=1)
+
+    # -- public API ----------------------------------------------------------
+
+    def generate(
+        self,
+        params: PyTree,
+        batch: PyTree,
+        max_new_tokens: int,
+        cache_len: int | None = None,
+        *,
+        eos_id: int | None = None,
+        max_new_per_request: np.ndarray | None = None,
+        pad_id: int | None = None,
+        use_scan: bool = True,
+    ) -> np.ndarray:
+        """Greedy decode.  batch: model inputs (tokens (B, S) etc.).
+        Returns (B, max_new_tokens) int32; rows finished early (EOS or
+        per-request budget) are right-padded with ``pad_id``."""
+        S = batch["tokens"].shape[1] if "tokens" in batch else batch["frames"].shape[1]
+        B = batch["tokens"].shape[0] if "tokens" in batch else batch["frames"].shape[0]
+        cache_len, steps = self.resolve_lengths(S, max_new_tokens, cache_len)
+        pad = int(pad_id if pad_id is not None else (eos_id if eos_id is not None else 0))
+        eos = int(eos_id) if eos_id is not None else _NO_EOS
+        if max_new_per_request is None:
+            limits = jnp.full((B,), np.iinfo(np.int32).max, jnp.int32)
+        else:
+            limits = jnp.asarray(max_new_per_request, jnp.int32)
+            if limits.shape != (B,):
+                raise ValueError(f"max_new_per_request shape {limits.shape} != ({B},)")
+
+        logits, cache = self._prefill(params, batch, cache_len=cache_len)
+        if use_scan:
+            toks = self._scan(
+                params, logits, cache, limits,
+                jnp.asarray(eos, jnp.int32), jnp.asarray(pad, jnp.int32), steps=steps,
+            )
+        else:
+            toks = self._python_generate(params, logits, cache, limits, eos, pad, steps)
+        out = np.asarray(toks)
+        if steps < max_new_tokens:  # cache-overrun truncation: pad the tail
+            out = np.pad(out, ((0, 0), (0, max_new_tokens - steps)), constant_values=pad)
+        return out

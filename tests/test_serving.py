@@ -1,0 +1,325 @@
+"""Coded serving subsystem (DESIGN.md §9): continuous batching bit-equal to
+sequential decode, SLO policy = first decodable replica subset, mid-flight
+admission/eviction, and the LMServer termination/scan satellites."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx.deadline import DeadlinePolicy, SLOPolicy
+from repro.configs import get_config
+from repro.core.simulator import ClusterSim
+from repro.core.straggler import FixedDelayStragglers
+from repro.models.lm import build_model
+from repro.serve import Request, ReplicaPool, ServingEngine, ServingMetrics
+from repro.serve.metrics import RequestRecord
+from repro.train.serve import LMServer
+
+ARCHS = ("smollm-360m", "mamba2-370m", "llama3.2-1b")
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(cfg, model, params, server) per arch — params shared across tests so
+    each model compiles once."""
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params, LMServer(model))
+    return out
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (s,)) for s in lens]
+
+
+def _sequential(server, params, prompts, new, cache_len):
+    return [
+        np.asarray(
+            server.generate(
+                params, {"tokens": jnp.asarray(p[None], jnp.int32)}, new, cache_len=cache_len
+            )[0]
+        )
+        for p in prompts
+    ]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: continuous batching == sequential decode, per request
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_continuous_batch_bit_equal_sequential(served, arch):
+    """Mixed-length requests, staggered arrivals, fewer slots than requests
+    (so admission happens mid-flight of a running batch): every request's
+    tokens are bit-equal to its own B=1 sequential ``LMServer.generate``."""
+    cfg, _, params, server = served[arch]
+    prompts = _prompts(cfg, (8, 14, 11, 9, 16))
+    new, cache_len = 7, 40
+    refs = _sequential(server, params, prompts, new, cache_len)
+
+    eng = ServingEngine(server, params, n_slots=2, cache_len=cache_len, decode_dt=0.01)
+    reqs = [
+        Request(rid=i, tokens=p, max_new_tokens=new, arrival_t=0.02 * i)
+        for i, p in enumerate(prompts)
+    ]
+    comps, metrics = eng.run(reqs)
+    assert [c.rid for c in comps] == list(range(len(prompts)))
+    for c, ref in zip(comps, refs):
+        np.testing.assert_array_equal(c.tokens, ref)
+    assert metrics.summary()["n_requests"] == len(prompts)
+
+
+def test_mid_flight_admission_preserves_survivors(served):
+    """A request inserted into a RUNNING batch neither perturbs the tokens
+    already decoded by surviving requests nor their remaining tokens."""
+    cfg, _, params, server = served["smollm-360m"]
+    prompts = _prompts(cfg, (10, 13, 9), seed=3)
+    new, cache_len = 8, 40
+    refs = _sequential(server, params, prompts, new, cache_len)
+
+    eng = ServingEngine(server, params, n_slots=3, cache_len=cache_len, decode_dt=0.01)
+    eng.submit(Request(rid=0, tokens=prompts[0], max_new_tokens=new))
+    eng.submit(Request(rid=1, tokens=prompts[1], max_new_tokens=new))
+    for _ in range(3):  # decode a few tokens with only requests 0 and 1
+        eng.step()
+    eng.submit(Request(rid=2, tokens=prompts[2], max_new_tokens=new))  # joins mid-flight
+    while eng.step():
+        pass
+    comps = sorted(eng.completions, key=lambda c: c.rid)
+    for c, ref in zip(comps, refs):
+        np.testing.assert_array_equal(c.tokens, ref)
+
+
+def test_eviction_frees_slots_and_zeroes_cache(served):
+    """Finished requests free their slot (later arrivals reuse it) and the
+    evicted slot's cache rows are zeroed."""
+    cfg, model, params, server = served["mamba2-370m"]
+    prompts = _prompts(cfg, (8, 8, 8), seed=5)
+    new, cache_len = 4, 24
+    eng = ServingEngine(server, params, n_slots=1, cache_len=cache_len, decode_dt=0.01)
+    comps, _ = eng.run(
+        [Request(rid=i, tokens=p, max_new_tokens=new) for i, p in enumerate(prompts)]
+    )
+    assert len(comps) == 3  # one slot served all three sequentially
+    assert eng.batch.n_active == 0
+    for leaf in jax.tree.leaves(eng.batch.cache["layers"]):
+        assert not np.asarray(jnp.abs(leaf)).sum(), "evicted slot cache not zeroed"
+    refs = _sequential(server, params, prompts, new, cache_len)
+    for c, ref in zip(comps, refs):
+        np.testing.assert_array_equal(c.tokens, ref)
+
+
+def test_encoder_only_arch_rejected():
+    """paper_cnn is not an LM; the encoder-only LM arch (hubert) must be
+    refused by both the server and the slot-cache layer."""
+    cfg = get_config("hubert-xlarge").reduced()
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="encoder-only"):
+        LMServer(model)
+    with pytest.raises(ValueError, match="encoder-only"):
+        model.empty_slot_cache({}, n_slots=2, cache_len=8)
+
+
+# ---------------------------------------------------------------------------
+# SLO policy over replica arrivals
+# ---------------------------------------------------------------------------
+
+
+def test_slo_policy_picks_first_decodable_subset(rng):
+    """On a seeded heterogeneous ClusterSim, the SLO resolve instant equals
+    the earliest exact-decodable moment of the replica arrivals — not the
+    wait-for-all max — and excludes the straggler."""
+    speeds = np.array([1.0, 2.0, 4.0, 8.0])
+    pool = ReplicaPool(
+        speeds, s=1, k=8, comm_time=0.01,
+        straggler_model=FixedDelayStragglers(s=1, delay=50.0),
+        policy=SLOPolicy.for_slo(ttft_slo_s=np.inf),
+        seed=0,
+    )
+    ptimes = pool.sim.sample_partition_times(pool.straggler_model, np.random.default_rng(7))
+    t_exact, used = pool.code.earliest_decodable(ptimes.finish)
+    t, outcome, used_resolve = pool.policy.resolve(
+        pool.code, ptimes, pool.policy.deadline_for(pool.code, speeds, 0.01)
+    )
+    assert t == t_exact
+    assert outcome.exact
+    assert set(used_resolve) == set(used)
+    straggler = int(np.argmax(ptimes.finish))
+    assert straggler not in used_resolve
+    assert t < float(np.max(ptimes.finish))
+
+
+def test_pool_prefill_first_vs_wait_for_all():
+    """Pool outcomes: the policied instant never exceeds wait-for-all, is
+    strictly better under stragglers, and scales with prompt length."""
+    speeds = np.array([1.0, 2.0, 4.0, 8.0])
+    pool = ReplicaPool(
+        speeds, s=1, k=8, work_ref_tokens=128,
+        straggler_model=FixedDelayStragglers(s=1, delay=20.0),
+        policy=SLOPolicy.for_slo(ttft_slo_s=np.inf),
+        seed=0,
+    )
+    outs = [pool.prefill(128) for _ in range(20)]
+    assert all(o.t_first <= o.t_all for o in outs)
+    assert all(o.exact for o in outs)  # s=1 tolerance absorbs 1 straggler
+    assert np.median([o.t_all / o.t_first for o in outs]) > 1.5
+    # work scaling: a 256-token prompt takes exactly 2x the 128-token clock
+    pool2 = ReplicaPool(
+        speeds, s=1, k=8, work_ref_tokens=128,
+        policy=SLOPolicy.for_slo(ttft_slo_s=np.inf), seed=0,
+    )
+    a, b = pool2.prefill(128, np.random.default_rng(3)), pool2.prefill(256, np.random.default_rng(3))
+    assert b.t_first == pytest.approx(2 * a.t_first)
+
+
+def test_slo_deadline_caps_the_tail():
+    """With a finite TTFT SLO, the answer instant never exceeds the deadline
+    even when the exact decode would: best-effort at the deadline."""
+    speeds = np.ones(4)
+    pool = ReplicaPool(
+        speeds, s=1, k=8,
+        straggler_model=FixedDelayStragglers(s=2, delay=100.0),  # > tolerance
+        policy=SLOPolicy.for_slo(ttft_slo_s=5.0),
+        seed=0,
+    )
+    outs = [pool.prefill(128) for _ in range(10)]
+    assert all(o.t_first <= 5.0 for o in outs)
+    assert any(not o.exact for o in outs)  # 2 stragglers > s=1: deadline answers
+
+
+def test_engine_ttft_improves_with_slo_pool(served):
+    """End-to-end: same trace, same decode; the SLO-policied pool's p99 TTFT
+    beats the wait-for-all counterfactual recorded on each request (in-tree
+    smoke of the benchmark gate)."""
+    cfg, _, params, server = served["mamba2-370m"]
+    prompts = _prompts(cfg, (8,) * 8, seed=11)
+    speeds = np.random.default_rng(0).uniform(1.0, 4.0, 10)
+    dt = 0.005
+    pool = ReplicaPool(
+        speeds, s=3, k=20,
+        straggler_model=FixedDelayStragglers(s=3, delay=30.0),  # 30% stragglers
+        policy=SLOPolicy.for_slo(ttft_slo_s=np.inf), seed=1,
+    )
+    eng = ServingEngine(server, params, n_slots=4, cache_len=24, replicas=pool, decode_dt=dt)
+    comps, _ = eng.run(
+        [Request(rid=i, tokens=p, max_new_tokens=4) for i, p in enumerate(prompts)]
+    )
+    ttft = np.array([c.record.ttft for c in comps])
+    # counterfactual: wait-for-all would first answer one decode step after
+    # the slowest replica reported — same queue wait, same decode cost
+    ttft_all = np.array(
+        [c.record.prefill_all_done_t + dt - c.record.arrival_t for c in comps]
+    )
+    assert np.all(ttft > 0)
+    assert np.percentile(ttft_all, 99) > 1.3 * np.percentile(ttft, 99)
+
+
+# ---------------------------------------------------------------------------
+# admission control & metrics
+# ---------------------------------------------------------------------------
+
+
+def test_queue_rejection_and_oversize_prompt(served):
+    cfg, _, params, server = served["mamba2-370m"]
+    eng = ServingEngine(server, params, n_slots=1, cache_len=16, max_queue=2, decode_dt=0.01)
+    prompts = _prompts(cfg, (8, 8, 8, 8), seed=7)
+    accepted = [eng.submit(Request(rid=i, tokens=p, max_new_tokens=2)) for i, p in enumerate(prompts)]
+    assert accepted == [True, True, False, False]
+    assert eng.metrics.rejected == 2
+    big = _prompts(cfg, (17,), seed=8)[0]  # prompt > cache_len: reject outright
+    eng2 = ServingEngine(server, params, n_slots=1, cache_len=16, decode_dt=0.01)
+    assert not eng2.submit(Request(rid=0, tokens=big, max_new_tokens=2))
+
+
+def test_metrics_summary_shape():
+    m = ServingMetrics()
+    for i in range(5):
+        m.observe(RequestRecord(
+            rid=i, arrival_t=0.0, admit_t=0.1, prefill_done_t=0.2 + i,
+            first_token_t=0.3 + i, done_t=1.0 + i, n_tokens=4,
+            prefill_exact=(i % 2 == 0), replicas_used=3,
+        ))
+    m.reject(2)
+    s = m.summary()
+    assert s["n_requests"] == 5 and s["n_rejected"] == 2
+    assert s["ttft_p99_s"] >= s["ttft_p50_s"]
+    assert s["latency_p99_s"] >= s["latency_p50_s"]
+    assert s["tokens_per_s"] > 0
+    assert 0.0 <= s["prefill_exact_fraction"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# LMServer satellites: termination, scan loop, cache-length robustness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ("smollm-360m", "mamba2-370m"))
+def test_scan_loop_equals_python_oracle(served, arch):
+    """The lax.scan decode loop is bit-equal to the original Python loop —
+    with and without termination features engaged."""
+    cfg, _, params, server = served[arch]
+    toks = jnp.asarray(np.stack(_prompts(cfg, (10, 10, 10), seed=2)), jnp.int32)
+    batch = {"tokens": toks}
+    a = server.generate(params, batch, 6, cache_len=24, use_scan=True)
+    b = server.generate(params, batch, 6, cache_len=24, use_scan=False)
+    np.testing.assert_array_equal(a, b)
+    lim = np.array([2, 6, 4])
+    a = server.generate(params, batch, 6, cache_len=24, max_new_per_request=lim, pad_id=7)
+    b = server.generate(params, batch, 6, cache_len=24, max_new_per_request=lim, pad_id=7,
+                        use_scan=False)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_eos_and_per_request_budgets(served):
+    cfg, _, params, server = served["smollm-360m"]
+    p = _prompts(cfg, (12,), seed=1)[0]
+    batch = {"tokens": jnp.asarray(p[None], jnp.int32)}
+    ref = np.asarray(server.generate(params, batch, 8, cache_len=32)[0])
+    eos = int(ref[3])  # a token the model actually emits mid-stream
+    out = np.asarray(server.generate(params, batch, 8, cache_len=32, eos_id=eos)[0])
+    first = int(np.argmax(ref == eos))
+    np.testing.assert_array_equal(out[: first + 1], ref[: first + 1])
+    assert (out[first + 1 :] == eos).all()  # pad defaults to eos_id
+    lim = np.array([3])
+    out = np.asarray(
+        server.generate(params, batch, 8, cache_len=32, max_new_per_request=lim, pad_id=0)[0]
+    )
+    np.testing.assert_array_equal(out[:3], ref[:3])
+    assert (out[3:] == 0).all()
+
+
+def test_cache_len_default_is_clamped(served):
+    """S + max_new_tokens past the serving max truncates the decode budget
+    (with a warning) instead of overrunning the cache."""
+    cfg, _, params, server0 = served["smollm-360m"]
+    server = LMServer(server0.model, max_cache_len=16)
+    p = _prompts(cfg, (8,), seed=1)[0]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = server.generate(params, {"tokens": jnp.asarray(p[None], jnp.int32)}, 20)
+    assert out.shape == (1, 20)
+    assert any("truncated" in str(x.message) for x in w)
+    # the first cache_len - S tokens match an untruncated run at cache_len
+    ref = np.asarray(
+        server0.generate(params, {"tokens": jnp.asarray(p[None], jnp.int32)}, 8, cache_len=16)[0]
+    )
+    np.testing.assert_array_equal(np.asarray(out)[0, :8], ref)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        server.generate(params, {"tokens": jnp.asarray(np.zeros((1, 20), np.int32))}, 4)
+
+
+def test_exact_first_no_straggler_policy_is_noop_latency():
+    """exact_first + no stragglers: the policy answers at the plain earliest
+    decodable moment — the engine's default pool adds no artificial wait."""
+    speeds = np.array([2.0, 2.0, 2.0, 2.0])
+    pool = ReplicaPool(speeds, s=1, k=8, policy=DeadlinePolicy.for_slo(ttft_slo_s=np.inf), seed=0)
+    o = pool.prefill(128, np.random.default_rng(0))
+    assert o.exact and o.t_first <= o.t_all
