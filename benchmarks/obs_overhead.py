@@ -1,0 +1,139 @@
+"""Observability overhead gate (DESIGN.md §10 acceptance).
+
+Measures the full ``CodedTrainer.step`` path — control-plane tick, fused
+jitted step, metric readback — with tracing OFF (the NULL_TRACER default)
+vs ON (a live flight recorder), on the steptime probe model (negligible
+compute, realistic batch bytes: the measurement is the instrumented code
+path, not matmuls).
+
+The contract being enforced: tracing off costs ONE attribute check per
+instrumented site, and tracing ON stays within :data:`GATE_RATIO`× of off
+— the flight recorder must be cheap enough to leave on in real runs.
+Standalone (``make bench-obs``, tier-2 CI) it exits nonzero on regression
+and merges an ``observability`` section into ``results/BENCH_run.json``.
+
+Timing idiom: interleaved best-of-rounds (the steptime convention) — the
+two variants alternate within each round, so machine-load drift hits both
+equally and the min-over-rounds strips contended rounds.
+
+Env: BENCH_FAST=1 shrinks iteration counts (the ratio is still measured).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+M, S = 8, 1
+GATE_RATIO = 1.05  # tracing-on must stay within 5% of tracing-off us/step
+
+
+def _fast() -> bool:
+    return os.environ.get("BENCH_FAST", "0") == "1"
+
+
+class _ProbeModel:
+    """Steptime's data-path probe: LM batch contract, tiny compute."""
+
+    d = 8
+
+    def init(self, rng):
+        return {"w": jax.random.normal(rng, (self.d, 1), jnp.float32)}
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.mean(batch["x"], axis=1) @ params["w"]
+        return jnp.sum(pred[:, 0] ** 2 * batch["weight"])
+
+
+def _mk_trainer(trace):
+    from repro.configs.base import CodingConfig, TrainConfig
+    from repro.train.trainer import CodedTrainer
+
+    coding = CodingConfig(scheme="heter_aware", s=S)
+    tc = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=1 << 16)
+    return CodedTrainer(
+        _ProbeModel(), coding, tc, m=M, part_mb=4,
+        true_speeds=np.linspace(1.0, 3.0, M), rng=0, backend="fused",
+        trace=trace,
+    )
+
+
+def run(n_iters: int | None = None) -> list[dict]:
+    from repro.obs.trace import Tracer
+
+    n_iters = n_iters if n_iters is not None else (40 if _fast() else 160)
+    mb, seq = 4, 512
+    r = np.random.default_rng(0)
+
+    steppers = {}
+    for name, trace in (("trace_off", None), ("trace_on", Tracer())):
+        tr = _mk_trainer(trace)
+        pb = {"x": r.normal(size=(tr.k, mb, seq, _ProbeModel.d)).astype(np.float32)}
+        state_box = [tr.init_state(jax.random.PRNGKey(0))]
+
+        def one_step(tr=tr, state_box=state_box, pb=pb):
+            state_box[0], _ = tr.step(state_box[0], pb)
+
+        for _ in range(3):  # compile + warm
+            one_step()
+        steppers[name] = (one_step, tr)
+
+    best = {name: float("inf") for name in steppers}
+    rounds = 5
+    per_round = max(n_iters // rounds, 4)
+    for _ in range(rounds):
+        for name, (fn, _tr) in steppers.items():
+            t0 = time.perf_counter()
+            for _ in range(per_round):
+                fn()
+            best[name] = min(best[name], (time.perf_counter() - t0) / per_round * 1e6)
+
+    tracer = steppers["trace_on"][1].tracer
+    return [{
+        "bench": "obs_overhead", "m": M, "s": S, "backend": "fused",
+        "iters": rounds * per_round,
+        "off_us_per_step": best["trace_off"],
+        "on_us_per_step": best["trace_on"],
+        "overhead_ratio": best["trace_on"] / best["trace_off"],
+        "trace_records": len(tracer),
+        "trace_dropped": tracer.n_dropped,
+    }]
+
+
+def derived_claims(rows) -> dict[str, float]:
+    r = rows[0]
+    return {
+        "accept_overhead_ratio": r["overhead_ratio"],
+        "off_us_per_step": r["off_us_per_step"],
+        "on_us_per_step": r["on_us_per_step"],
+        "trace_records": float(r["trace_records"]),
+    }
+
+
+def main() -> int:
+    from benchmarks._util import merge_into_bench_run
+
+    rows = run()
+    claims = derived_claims(rows)
+    r = rows[0]
+    print("bench,off_us,on_us,ratio,records")
+    print(f"obs_overhead,{r['off_us_per_step']:.1f},{r['on_us_per_step']:.1f},"
+          f"{r['overhead_ratio']:.3f},{r['trace_records']}")
+    merge_into_bench_run("observability", claims, fast=_fast())
+    ratio = claims["accept_overhead_ratio"]
+    if ratio > GATE_RATIO:
+        print(f"GATE FAIL: tracing-on {ratio:.3f}x tracing-off > {GATE_RATIO}x",
+              file=sys.stderr)
+        return 1
+    print(f"# gate OK: tracing-on {ratio:.3f}x tracing-off <= {GATE_RATIO}x "
+          f"({r['trace_records']} records captured)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,6 @@ Env: BENCH_FAST=1 shrinks iteration counts for CI-speed runs.
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -21,7 +20,8 @@ def _fast() -> bool:
 
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
-    from benchmarks import fig6_approx, kernels_bench, roofline_table, scaling, serving, steptime
+    from benchmarks import fig6_approx, kernels_bench, obs_overhead, roofline_table
+    from benchmarks import scaling, serving, steptime
 
     t0 = time.time()
     all_rows = []
@@ -108,6 +108,14 @@ def main() -> None:
     summary.append(("serving", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
+    # --- observability: tracing overhead gate (DESIGN.md §10) ---
+    t = time.time()
+    rows = obs_overhead.run()
+    claims = obs_overhead.derived_claims(rows)
+    all_rows += rows
+    summary.append(("observability", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
     # --- kernels ---
     t = time.time()
     rows = kernels_bench.run()
@@ -129,21 +137,24 @@ def main() -> None:
     for name, us, derived, _ in summary:
         print(f"{name},{us:.2f},{derived}")
 
-    os.makedirs("results", exist_ok=True)
-    with open("results/bench_rows.json", "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
+    from benchmarks._util import BENCH_SCHEMA_VERSION, atomic_write_json
+
+    atomic_write_json("results/bench_rows.json", all_rows)
     # machine-readable perf trajectory: per-section us_per_call + the derived
-    # claims at full precision (the display strings above are rounded)
-    with open("results/BENCH_run.json", "w") as f:
-        json.dump({
-            "fast": _fast(),
-            "total_s": time.time() - t0,
-            "n_detail_rows": len(all_rows),
-            "sections": [
-                {"name": name, "us_per_call": float(us), "derived": derived, "claims": claims}
-                for name, us, derived, claims in summary
-            ],
-        }, f, indent=1, default=str)
+    # claims at full precision (the display strings above are rounded).
+    # Atomic write + schema/timestamp envelope via benchmarks._util — a
+    # crashed sweep never leaves a torn artifact.
+    atomic_write_json("results/BENCH_run.json", {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "fast": _fast(),
+        "total_s": time.time() - t0,
+        "n_detail_rows": len(all_rows),
+        "sections": [
+            {"name": name, "us_per_call": float(us), "derived": derived, "claims": claims}
+            for name, us, derived, claims in summary
+        ],
+    })
     print(f"# {len(all_rows)} detail rows -> results/bench_rows.json; "
           f"summary -> results/BENCH_run.json (total {time.time() - t0:.1f}s)",
           file=sys.stderr)

@@ -22,7 +22,6 @@ the large-m case).
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -212,24 +211,11 @@ def derived_claims(rows) -> dict[str, float]:
 
 
 def _merge_into_bench_run(name: str, claims: dict) -> None:
-    """Standalone runs keep results/BENCH_run.json current: replace (or
-    append) the named section in place, preserving the others."""
-    os.makedirs("results", exist_ok=True)
-    path = os.path.join("results", "BENCH_run.json")
-    doc = {"fast": _fast(), "sections": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                doc = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            pass
-    derived = ";".join(f"{k}={v:.2f}" for k, v in claims.items())
-    section = {"name": name, "us_per_call": 0.0, "derived": derived, "claims": claims}
-    sections = [s for s in doc.get("sections", []) if s.get("name") != name]
-    sections.append(section)
-    doc["sections"] = sections
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1, default=str)
+    """Standalone runs keep results/BENCH_run.json current (atomic +
+    schema-stamped via benchmarks._util)."""
+    from benchmarks._util import merge_into_bench_run
+
+    merge_into_bench_run(name, claims, fast=_fast())
 
 
 def main() -> int:

@@ -25,7 +25,6 @@ straggler rate stay — the gate IS the tail-latency case).
 
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -119,6 +118,7 @@ def run_slo_sim(n_requests: int | None = None, seed: int = 0) -> list[dict]:
     decode clock added, so the ratio is at equal output tokens."""
     from repro.approx.deadline import SLOPolicy
     from repro.core.straggler import FixedDelayStragglers
+    from repro.obs.stats import pct
     from repro.serve.replicas import ReplicaPool
 
     n = n_requests if n_requests is not None else (300 if _fast() else 2000)
@@ -146,11 +146,11 @@ def run_slo_sim(n_requests: int | None = None, seed: int = 0) -> list[dict]:
         rows.append({
             "bench": "serving_slo", "policy": label, "m": M_REPLICAS,
             "straggler_fraction": STRAGGLER_FRACTION, "n_requests": n,
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p99_s": float(np.percentile(ttft, 99)),
-            "waitall_ttft_p50_s": float(np.percentile(ttft_all, 50)),
-            "waitall_ttft_p99_s": float(np.percentile(ttft_all, 99)),
-            "p99_improvement": float(np.percentile(ttft_all, 99) / np.percentile(ttft, 99)),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p99_s": pct(ttft, 99),
+            "waitall_ttft_p50_s": pct(ttft_all, 50),
+            "waitall_ttft_p99_s": pct(ttft_all, 99),
+            "p99_improvement": pct(ttft_all, 99) / pct(ttft, 99),
             "exact_fraction": float(exact.mean()),
         })
     return rows
@@ -213,24 +213,11 @@ def derived_claims(rows) -> dict[str, float]:
 
 
 def _merge_into_bench_run(name: str, claims: dict) -> None:
-    """Standalone runs keep results/BENCH_run.json current: replace (or
-    append) the named section in place, preserving the others."""
-    os.makedirs("results", exist_ok=True)
-    path = os.path.join("results", "BENCH_run.json")
-    doc = {"fast": _fast(), "sections": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                doc = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            pass
-    derived = ";".join(f"{k}={v:.2f}" for k, v in claims.items())
-    section = {"name": name, "us_per_call": 0.0, "derived": derived, "claims": claims}
-    sections = [s for s in doc.get("sections", []) if s.get("name") != name]
-    sections.append(section)
-    doc["sections"] = sections
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1, default=str)
+    """Standalone runs keep results/BENCH_run.json current (atomic +
+    schema-stamped via benchmarks._util)."""
+    from benchmarks._util import merge_into_bench_run
+
+    merge_into_bench_run(name, claims, fast=_fast())
 
 
 def main() -> int:

@@ -122,6 +122,10 @@ class DeadlinePolicy:
     deadline_s: float | None = None
     step_inexact: bool = True
     max_events: int = 64
+    # observability seam (DESIGN.md §10): the trainer/engine installs its
+    # Tracer here; None keeps resolution emission-free.  Excluded from
+    # repr/eq — two policies with different tracers are the same policy.
+    tracer: object | None = dataclasses.field(default=None, repr=False, compare=False)
 
     def __post_init__(self) -> None:
         if self.mode not in DEADLINE_MODES:
@@ -233,7 +237,27 @@ class DeadlinePolicy:
     ) -> tuple[float, DecodeOutcome, tuple[int, ...] | None]:
         """Pick (step time τ, decode outcome, used set) for one iteration's
         clocks.  ``used`` is the earliest-decodable worker set when the
-        exact Eq. 3 search chose the instant, None otherwise."""
+        exact Eq. 3 search chose the instant, None otherwise.
+
+        With a :attr:`tracer` installed, each resolution lands as one
+        ``deadline.resolve`` instant (mode, deadline, τ, exactness,
+        residual, n_used, capped) — the per-decision audit trail the
+        straggler forensics and obs_report consume."""
+        tau, outcome, used = self._resolve(code, ptimes, deadline)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant(
+                "deadline.resolve",
+                mode=self.mode, deadline=float(deadline), tau=float(tau),
+                exact=bool(outcome.exact), residual=float(outcome.residual),
+                n_used=int(outcome.n_used),
+                capped=bool(np.isfinite(deadline) and tau >= deadline),
+            )
+        return tau, outcome, used
+
+    def _resolve(
+        self, code: GradientCode, ptimes: PartitionTimes, deadline: float
+    ) -> tuple[float, DecodeOutcome, tuple[int, ...] | None]:
         if self.mode == "fixed_deadline":
             return deadline, self._outcome_at(code, ptimes, deadline), None
 

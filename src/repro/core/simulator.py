@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.coding import CodingScheme
 from repro.core.decoding import DecodeError, Decoder
 from repro.core.straggler import StragglerModel, StragglerProfile
+from repro.obs.stats import pct
 
 __all__ = [
     "ArrivalEvent",
@@ -400,7 +401,7 @@ class ClusterSim:
         useful = float(sum(it.useful_compute for it in iters if np.isfinite(it.T)))
         busy = float(sum(it.busy_compute for it in iters if np.isfinite(it.T)))
         if ok.any():
-            mean_T, p50, p99 = float(Ts[ok].mean()), float(np.percentile(Ts[ok], 50)), float(np.percentile(Ts[ok], 99))
+            mean_T, p50, p99 = float(Ts[ok].mean()), pct(Ts[ok], 50), pct(Ts[ok], 99)
         else:
             mean_T = p50 = p99 = np.inf
         return RunResult(

@@ -35,6 +35,7 @@ from repro.core.straggler import (
 )
 from repro.data.pipeline import SyntheticData
 from repro.models.lm import build_model
+from repro.obs.trace import Tracer
 from repro.optim.adam import adamw_init
 from repro.train.engine import BACKENDS
 from repro.train.trainer import CodedTrainer, TrainerState
@@ -86,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run (open in "
+                         "ui.perfetto.dev); enables the flight recorder")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="write the structured event log (one train.step JSON "
+                         "object per step + instants) for repro.launch.obs_report")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="flight-recorder ring size (records); oldest dropped beyond it")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -105,10 +114,15 @@ def main(argv=None):
             mode=args.deadline_mode, target_residual=args.target_residual,
             slack=args.deadline_slack, deadline_s=args.deadline_s,
         )
+    tracer = (
+        Tracer(capacity=args.trace_capacity)
+        if (args.trace_out or args.log_jsonl)
+        else None
+    )
     trainer = CodedTrainer(
         model, coding, tc, m=args.m, part_mb=args.part_mb,
         straggler_model=straggler_from_args(args), true_speeds=speeds, rng=args.seed,
-        backend=args.backend, deadline_policy=policy,
+        backend=args.backend, deadline_policy=policy, trace=tracer,
     )
     data = SyntheticData(cfg, k=trainer.k, part_mb=args.part_mb, seq_len=args.seq_len, seed=args.seed)
 
@@ -149,6 +163,15 @@ def main(argv=None):
     sim_total = totals["sim"]
     if ckpt:
         ckpt.wait()
+    if tracer is not None:
+        if args.trace_out:
+            tracer.write_chrome(args.trace_out)
+            print(f"chrome trace: {args.trace_out} ({len(tracer)} records, "
+                  f"{tracer.n_dropped} dropped) — open in ui.perfetto.dev")
+        if args.log_jsonl:
+            n = tracer.write_jsonl(args.log_jsonl)
+            print(f"event log: {args.log_jsonl} ({n} lines) — analyse with "
+                  f"python -m repro.launch.obs_report {args.log_jsonl}")
     # metrics is {} when the loop ran zero steps (e.g. --resume at --steps)
     print(json.dumps({
         "final_loss": metrics.get("loss"), "wall_s": time.time() - t0,

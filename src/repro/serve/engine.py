@@ -31,6 +31,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serve.batching import SlotBatch
 from repro.serve.metrics import RequestRecord, ServingMetrics
 from repro.serve.replicas import PrefillOutcome, ReplicaPool
@@ -99,6 +100,12 @@ class ServingEngine:
         counted in the metrics.
       decode_dt: virtual seconds per batched decode step; None = measured
         wall time of each step (benchmarks pin it for determinism).
+      trace: optional flight recorder (DESIGN.md §10).  Each finished
+        request lands as nested sim-clock spans on its own track
+        (tid = rid): ``request`` ⊇ ``request.queue`` / ``request.prefill``
+        / ``request.decode``, plus ``request.first_token`` /
+        ``prefill.inexact`` instants — endpoints taken verbatim from the
+        :class:`RequestRecord`, so the trace IS the metrics timeline.
     """
 
     def __init__(
@@ -111,6 +118,7 @@ class ServingEngine:
         replicas: ReplicaPool | None = None,
         max_queue: int = 256,
         decode_dt: float | None = None,
+        trace: Tracer | None = None,
     ):
         self.server = server
         self.params = params
@@ -119,6 +127,7 @@ class ServingEngine:
         self.max_queue = int(max_queue)
         self.decode_dt = decode_dt
         self.metrics = ServingMetrics()
+        self.tracer = trace if trace is not None else NULL_TRACER
         self.now = 0.0
         self._queue: list[tuple[float, int, Request]] = []  # arrival-ordered heap
         self._seq = 0
@@ -132,9 +141,19 @@ class ServingEngine:
         fit the slot cache at all)."""
         if len(self._queue) >= self.max_queue:
             self.metrics.reject()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "request.reject", t=float(req.arrival_t), clock="sim",
+                    tid=int(req.rid), rid=int(req.rid), reason="queue_full",
+                )
             return False
         if len(req.tokens) > self.batch.cache_len:
             self.metrics.reject()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "request.reject", t=float(req.arrival_t), clock="sim",
+                    tid=int(req.rid), rid=int(req.rid), reason="prompt_too_long",
+                )
             return False
         heapq.heappush(self._queue, (float(req.arrival_t), self._seq, req))
         self._seq += 1
@@ -190,6 +209,35 @@ class ServingEngine:
             prefill_all_done_t=act.admit_t + act.prefill.t_all,
         )
         self.metrics.observe(rec)
+        tr = self.tracer
+        if tr.enabled:
+            # the request's sim-clock lifecycle, endpoints verbatim from the
+            # record (tested for exact agreement in tests/test_obs.py)
+            tid = int(rec.rid)
+            tr.span_at(
+                "request", rec.arrival_t, rec.done_t, clock="sim", tid=tid,
+                rid=tid, n_tokens=rec.n_tokens,
+                prefill_exact=rec.prefill_exact, replicas_used=rec.replicas_used,
+            )
+            tr.span_at("request.queue", rec.arrival_t, rec.admit_t, clock="sim", tid=tid)
+            tr.span_at(
+                "request.prefill", rec.admit_t, rec.prefill_done_t, clock="sim",
+                tid=tid, exact=rec.prefill_exact, replicas_used=rec.replicas_used,
+                all_done_t=rec.prefill_all_done_t,
+            )
+            tr.span_at(
+                "request.decode", rec.prefill_done_t, rec.done_t, clock="sim",
+                tid=tid, n_tokens=rec.n_tokens,
+            )
+            tr.instant(
+                "request.first_token", t=rec.first_token_t, clock="sim",
+                tid=tid, rid=tid,
+            )
+            if not rec.prefill_exact:
+                tr.instant(
+                    "prefill.inexact", t=rec.prefill_done_t, clock="sim",
+                    tid=tid, rid=tid, replicas_used=rec.replicas_used,
+                )
         self.completions.append(
             Completion(rid=act.req.rid, tokens=np.asarray(act.emitted, np.int32), record=rec)
         )
@@ -204,6 +252,10 @@ class ServingEngine:
         emit = self.batch.step(self.params)
         dt = self.decode_dt if self.decode_dt is not None else (time.perf_counter() - t0)
         self.now += dt
+        if self.tracer.enabled:
+            self.tracer.counter(
+                "serve.active", float(len(self._active)), t=self.now, clock="sim"
+            )
         for act in list(self._active.values()):
             tok = int(emit[act.slot])
             act.emitted.append(tok)

@@ -13,6 +13,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.stats import pct
+
 __all__ = ["RequestRecord", "ServingMetrics"]
 
 
@@ -61,8 +63,9 @@ class RequestRecord:
         return self.admit_t - self.arrival_t
 
 
-def _pct(xs: list[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+# the one shared percentile helper (DESIGN.md §10) — same NaN-on-empty
+# semantics this module always had, kept under its local name for callers
+_pct = pct
 
 
 class ServingMetrics:

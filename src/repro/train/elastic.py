@@ -18,12 +18,14 @@ observations) fall out of the same tick/observe pair.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
 
 from repro.approx.deadline import DeadlinePolicy, StepTick
 from repro.core.codec import Codec
+from repro.obs.trace import NULL_TRACER
 from repro.core.registry import MembershipStats
 from repro.core.simulator import ChurnSchedule, ClusterSim
 from repro.core.straggler import StragglerProfile
@@ -75,6 +77,9 @@ class ElasticController:
         # iteration leaves state.step unchanged, so the trainer asks about
         # the same step again and must NOT get the events twice
         self._churn_drained = -1
+        # observability seam (DESIGN.md §10): the trainer installs its
+        # tracer; standalone controllers keep the zero-cost NULL singleton
+        self.tracer = NULL_TRACER
 
     @property
     def m(self) -> int:
@@ -168,6 +173,12 @@ class ElasticController:
             return False
         self.codec.rebalance(self.estimator.normalized())
         self.estimator.mark_applied()
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant(
+                "elastic.rebalance", step=int(step),
+                c_est=[float(x) for x in self.estimator.normalized()],
+            )
         return True
 
     # -- elastic membership (DESIGN.md §8) -----------------------------------
@@ -228,6 +239,9 @@ class ElasticController:
         # the transition re-ran allocation against the current estimate:
         # that IS an applied rebalance for hysteresis purposes
         self.estimator.mark_applied()
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("elastic.membership", **dataclasses.asdict(stats))
         return stats
 
     def apply_churn(self, step: int) -> MembershipStats | None:

@@ -57,6 +57,7 @@ from repro.core.aggregator import (
 )
 from repro.core.codec import Codec
 from repro.core.decoding import DecodeOutcome
+from repro.obs.trace import NULL_TRACER
 from repro.optim.adam import AdamWState, adamw_init, adamw_update, global_norm
 from repro.optim.schedules import cosine_warmup
 
@@ -109,6 +110,9 @@ class StepEngine:
         self.coding_axes = coding_axes
         self.compress = compress
         self.host_pack = host_pack
+        # observability seam (DESIGN.md §10): the trainer installs its
+        # tracer here; standalone engines keep the zero-cost NULL singleton
+        self.tracer = NULL_TRACER
 
         # built ONCE: re-creating value_and_grad/grad transforms per call
         # used to re-trace the whole model every step
@@ -361,35 +365,74 @@ class StepEngine:
     ) -> tuple[TrainerState, dict[str, float]]:
         """One optimizer step from a partition-major batch + decode vector
         (or :class:`DecodeOutcome` — inexact/partial steps use whatever
-        arrived, shapes unchanged, so the jitted path never recompiles)."""
+        arrived, shapes unchanged, so the jitted path never recompiles).
+
+        Phase spans (DESIGN.md §10): with tracing on, the host-side cost of
+        each step phase lands on the wall-clock track.  The fused backend is
+        ONE XLA program, so pack/encode/decode/apply collapse into a single
+        ``phase.fused`` span (its close includes the blocking metric
+        readback — i.e. device time); the protocol backends expose their
+        separable phases.  Tracing off costs one attribute check."""
+        tr = self.tracer
+        traced = tr.enabled
         a_vec, support = self._split_decode(a)
         if self.backend == "fused" and self.host_pack:
+            t0 = tr.clock() if traced else 0.0
             batch = {
                 k: jnp.asarray(v)
                 for k, v in self._flat_batch(partition_batch, a_vec, support).items()
             }
+            if traced:
+                t1 = tr.clock()
+                tr.span_at("phase.pack+upload", t0, t1, clock="wall", where="host")
             params, opt, metrics = self._fused_step_host(
                 state.params, state.opt, batch, jnp.asarray(state.step)
             )
+            out = {k: float(v) for k, v in metrics.items()}  # blocks on device
+            if traced:
+                tr.span_at("phase.fused", t1, tr.clock(), clock="wall",
+                           phases="fwd+bwd+decode+apply")
         elif self.backend == "fused":
+            t0 = tr.clock() if traced else 0.0
             pids, coeff, mask = self._device_plan()
             pbatch = jax.tree.map(jnp.asarray, partition_batch)
+            a_dev = jnp.asarray(np.asarray(a_vec), jnp.float32)
+            sup_dev = self._support_dev(support)
+            if traced:
+                t1 = tr.clock()
+                tr.span_at("phase.upload", t0, t1, clock="wall",
+                           what="unique batch + decode vector + support mask")
             params, opt, metrics = self._fused_step(
-                state.params, state.opt, pbatch,
-                jnp.asarray(np.asarray(a_vec), jnp.float32),
-                self._support_dev(support), pids, coeff, mask, jnp.asarray(state.step),
+                state.params, state.opt, pbatch, a_dev,
+                sup_dev, pids, coeff, mask, jnp.asarray(state.step),
             )
+            out = {k: float(v) for k, v in metrics.items()}  # blocks on device
+            if traced:
+                tr.span_at("phase.fused", t1, tr.clock(), clock="wall",
+                           phases="pack+encode+decode+apply")
         else:
+            t0 = tr.clock() if traced else 0.0
             grads = self.gradients(state.params, partition_batch, a)
+            if traced:
+                t1 = tr.clock()
+                name = ("phase.pack+encode+wire+decode" if self.backend == "spmd"
+                        else "phase.gradients")
+                tr.span_at(name, t0, t1, clock="wall", backend=self.backend)
             pids, coeff, mask = self._device_plan()
             pbatch = jax.tree.map(jnp.asarray, partition_batch)
             loss = self._loss_fwd(
                 state.params, pbatch, jnp.asarray(np.asarray(a_vec), jnp.float32),
                 self._support_dev(support), pids, coeff, mask,
             )
+            if traced:
+                t2 = tr.clock()
+                tr.span_at("phase.loss", t1, t2, clock="wall")
             params, opt, metrics = self._apply(
                 state.params, state.opt, grads, jnp.asarray(state.step)
             )
             metrics = {**metrics, "loss": loss}
+            out = {k: float(v) for k, v in metrics.items()}  # blocks on device
+            if traced:
+                tr.span_at("phase.apply", t2, tr.clock(), clock="wall")
         new_state = TrainerState(params=params, opt=opt, step=state.step + 1)
-        return new_state, {k: float(v) for k, v in metrics.items()}
+        return new_state, out

@@ -22,6 +22,8 @@ from typing import Any, Iterator, Protocol
 
 import jax
 
+from repro.obs.trace import NULL_TRACER, Tracer
+
 __all__ = ["DevicePrefetcher"]
 
 
@@ -34,20 +36,35 @@ class DevicePrefetcher:
     batch of lookahead built on a worker thread: while the consumer runs
     step t, the thread generates and uploads batch t+1 (double buffering —
     one slot in flight keeps peak memory at 2 batches).
+
+    With a tracer installed (DESIGN.md §10), each background
+    generate+upload lands as a ``prefetch.upload`` span on its own
+    wall-clock track (tid=1) — overlap with the ``step`` spans on tid=0 is
+    the double-buffering working as designed; a gap before a step span is
+    a prefetch stall.
     """
 
-    def __init__(self, data: BatchSource, start: int, stop: int, device=None):
+    def __init__(
+        self, data: BatchSource, start: int, stop: int, device=None,
+        trace: Tracer | None = None,
+    ):
         self.data = data
         self.start = start
         self.stop = stop
         self.device = device
+        self.tracer = trace if trace is not None else NULL_TRACER
 
     def _load(self, step: int):
+        tr = self.tracer
+        t0 = tr.clock() if tr.enabled else 0.0
         batch = self.data.batch(step)
-        return (
+        out = (
             jax.device_put(batch, self.device) if self.device is not None
             else jax.device_put(batch)
         )
+        if tr.enabled:
+            tr.span_at("prefetch.upload", t0, tr.clock(), clock="wall", tid=1, step=step)
+        return out
 
     def __iter__(self) -> Iterator[tuple[int, Any]]:
         if self.start >= self.stop:

@@ -31,6 +31,7 @@ paper's "avg time per iteration".
 from __future__ import annotations
 
 import copy
+import dataclasses
 from typing import Callable
 
 import jax
@@ -43,6 +44,8 @@ from repro.core.registry import MembershipStats
 from repro.core.simulator import ChurnSchedule
 from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
 from repro.models.lm import LM
+from repro.obs.straggler import StragglerForensics
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.train.elastic import ElasticController
 from repro.train.engine import StepEngine, TrainerState
 from repro.train.prefetch import DevicePrefetcher
@@ -77,6 +80,7 @@ class CodedTrainer:
         backend: str = "fused",
         deadline_policy: DeadlinePolicy | None = None,
         churn: ChurnSchedule | None = None,
+        trace: Tracer | None = None,
     ):
         self.model = model
         self.coding = coding
@@ -97,6 +101,19 @@ class CodedTrainer:
         self.elastic = ElasticController(
             self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init,
             policy=deadline_policy, churn=churn,
+        )
+        # -- observability (DESIGN.md §10): one tracer threaded through the
+        # whole stack.  Off (the default) it is the NULL singleton and every
+        # instrumented site costs one attribute check; the numerics are
+        # identical either way (tested bit-equal in tests/test_obs.py).
+        self.tracer = trace if trace is not None else NULL_TRACER
+        self.engine.tracer = self.tracer
+        self.elastic.tracer = self.tracer
+        self.elastic.policy.tracer = self.tracer
+        self._sim_now = 0.0  # accumulated simulated seconds (the sim clock)
+        self.forensics = (
+            StragglerForensics(m, self.elastic.true_speeds)
+            if self.tracer.enabled else None
         )
 
     # convenience views (stable public surface; tests/examples rely on them)
@@ -127,7 +144,7 @@ class CodedTrainer:
         state and the last step's metrics.
         """
         metrics: dict[str, float] = {}
-        for step, batch in DevicePrefetcher(data, start, steps):
+        for step, batch in DevicePrefetcher(data, start, steps, trace=self.tracer):
             state, metrics = self.step(state, batch)
             if on_step is not None:
                 on_step(step, state, metrics)
@@ -177,12 +194,23 @@ class CodedTrainer:
         the policy's choice, not a separate code path.  Scheduled join/leave
         events for this step are applied FIRST, so the new worker set's
         clocks, decode, and gradients all see the transition."""
+        tr = self.tracer
+        traced = tr.enabled  # ONE attribute check when tracing is off
+        t_step0 = tr.clock() if traced else 0.0
         churn_stats = None
         if self.elastic.sim.membership_events(state.step):
             self._check_membership_supported()
             churn_stats = self.elastic.apply_churn(state.step)
             if churn_stats is not None:
                 self.apply_membership(churn_stats)
+                if traced:
+                    payload = dataclasses.asdict(churn_stats)
+                    tr.instant("churn", t=self._sim_now, clock="sim",
+                               step=int(state.step), **payload)
+                    if self.forensics is not None:
+                        self.forensics.on_membership(
+                            state.step, self.m, payload, self.elastic.true_speeds
+                        )
         # the batch must match the LIVE partition count — structural schemes
         # (k = m) change k on churn, and a stale batch would silently
         # misalign partition data under the slot gather
@@ -203,7 +231,12 @@ class CodedTrainer:
             )
 
         # --- timing model + decode resolution (what the paper measures) ---
+        t0 = tr.clock() if traced else 0.0
         tick = self.elastic.tick(profile)
+        if traced:
+            tr.span_at("step.resolve", t0, tr.clock(), clock="wall",
+                       step=int(state.step))
+            loads_now = self.elastic.codec.code.worker_load().astype(np.float64)
         outcome = tick.outcome
         self._steps_taken += 1
         self._exact_steps += int(outcome.exact)
@@ -233,15 +266,22 @@ class CodedTrainer:
             # still count.  Full metric key set so consumers can log
             # unconditionally.
             self.elastic.observe(tick)
-            return state, {
+            out = {
                 **_SKIP_METRICS, "skipped": 1.0, **base, "n_used": 0.0,
                 "exact_fraction": self._exact_fraction(),
             }
+            if traced:
+                self._record_step(state.step, tick, loads_now, out, t_step0)
+            return state, out
 
         new_state, metrics = self.engine.step(state, partition_batch, outcome)
 
         # --- throughput estimation + elastic re-encode ---
+        t0 = tr.clock() if traced else 0.0
         self.elastic.observe(tick)
+        if traced:
+            tr.span_at("step.observe", t0, tr.clock(), clock="wall",
+                       step=int(state.step))
         out = {
             **metrics, **base,
             "n_used": float(tick.n_used),
@@ -250,7 +290,81 @@ class CodedTrainer:
         }
         if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
             out["rebalanced"] = 1.0
+        if traced:
+            self._record_step(state.step, tick, loads_now, out, t_step0)
         return new_state, out
+
+    def _record_step(
+        self, step: int, tick, loads: np.ndarray, out: dict[str, float],
+        t_wall0: float,
+    ) -> None:
+        """Tracing-only per-step emission (DESIGN.md §10): the sim-clock
+        iteration window + per-worker arrival instants, the forensics
+        ledger update, and one ``train.step`` event-log record with stable
+        keys.  Never called when tracing is off — the step path stays
+        allocation-free."""
+        tr = self.tracer
+        T = tick.T
+        base_t = self._sim_now
+        skipped = bool(out["skipped"])
+        if np.isfinite(T):
+            tr.span_at(
+                "sim.iteration", base_t, base_t + T, clock="sim", step=int(step),
+                exact=bool(tick.outcome.exact), skipped=skipped,
+                residual=float(tick.outcome.residual), n_used=int(tick.n_used),
+            )
+            if np.isfinite(tick.deadline):
+                tr.instant("sim.deadline", t=base_t + tick.deadline, clock="sim",
+                           step=int(step), deadline=float(tick.deadline))
+            finish = tick.ptimes.finish
+            for w in range(finish.shape[0]):
+                f = float(finish[w])
+                if loads[w] > 0 and np.isfinite(f):
+                    late = f > T + 1e-12
+                    # late arrivals are clipped to the step's end: the work
+                    # landed after τ and was discarded (worker track = tid w+1)
+                    tr.instant(
+                        "arrive.late" if late else "arrive",
+                        t=base_t + min(f, T), clock="sim", tid=w + 1,
+                        worker=w, finish=f, step=int(step),
+                    )
+            if not tick.outcome.exact:
+                tr.instant("decode.inexact", t=base_t + T, clock="sim",
+                           step=int(step), residual=float(tick.outcome.residual),
+                           n_used=int(tick.n_used))
+            if out.get("rebalanced"):
+                tr.instant("rebalance", t=base_t + T, clock="sim", step=int(step))
+            self._sim_now += T
+        else:
+            tr.instant("sim.skip", t=base_t, clock="sim", step=int(step))
+
+        if self.forensics is not None:
+            self.forensics.observe_step(
+                step, tau=float(T), deadline=float(tick.deadline),
+                exact=bool(tick.outcome.exact), skipped=skipped,
+                finish=tick.ptimes.finish, load=loads,
+                c_est=self.elastic.estimator.c, c_true=self.elastic.true_speeds,
+            )
+            if out.get("rebalanced"):
+                self.forensics.on_rebalance(step, self.elastic.estimator.normalized())
+
+        tr.event(
+            "train.step",
+            step=int(step), tau=float(T), deadline=float(tick.deadline),
+            exact=bool(tick.outcome.exact), skipped=skipped,
+            residual=float(tick.outcome.residual), n_used=float(out["n_used"]),
+            loss=float(out["loss"]), grad_norm=float(out["grad_norm"]),
+            lr=float(out["lr"]), sim_iter_time=float(out["sim_iter_time"]),
+            n_stragglers=float(out["n_stragglers"]),
+            exact_fraction=float(out["exact_fraction"]),
+            rebalanced=float(out.get("rebalanced", 0.0)), m=float(self.m),
+            finish=np.asarray(tick.ptimes.finish, np.float64).tolist(),
+            load=loads.tolist(),
+            c_est=np.asarray(self.elastic.estimator.c, np.float64).tolist(),
+            c_true=np.asarray(self.elastic.true_speeds, np.float64).tolist(),
+        )
+        tr.span_at("step", t_wall0, tr.clock(), clock="wall", step=int(step),
+                   skipped=skipped)
 
     # -- checkpoint extras ---------------------------------------------------
 
@@ -266,6 +380,9 @@ class CodedTrainer:
             "trainer_rng_state": copy.deepcopy(self._rng.bit_generator.state),
             "elastic": self.elastic.state_dict(),
             "codec": self.codec.state_dict(),
+            # the sim clock is observability-only (trace timeline offsets) —
+            # restoring it keeps a resumed run's trace contiguous
+            "sim_now": float(self._sim_now),
         }
 
     def load_state_extras(self, extras: dict) -> None:
@@ -278,3 +395,4 @@ class CodedTrainer:
         self.codec.load_state_dict(extras["codec"])
         self.elastic.load_state_dict(extras["elastic"])
         self.m = self.codec.m
+        self._sim_now = float(extras.get("sim_now", 0.0))
