@@ -2,7 +2,7 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast test-tier2 test-membership churn-soak bench bench-smoke bench-scaling bench-serving bench-obs quickstart
+.PHONY: test test-fast test-tier2 test-membership churn-soak chaos-soak bench bench-smoke bench-scaling bench-serving bench-obs bench-resilience quickstart
 
 test:
 	./scripts/test.sh
@@ -15,6 +15,9 @@ test-membership:  ## elastic-membership churn harness (DESIGN.md §8)
 
 churn-soak:  ## tier-2 churn soak: 50 random transitions at m up to 64
 	CHURN_SOAK=1 ./scripts/test.sh tests/test_membership.py -k soak
+
+chaos-soak:  ## tier-2 chaos soak: long mixed-fault runs at m=10 (DESIGN.md §11)
+	CHAOS_SOAK=1 ./scripts/test.sh tests/test_resilience.py -k soak
 
 test-tier2:  ## tier-1 suite + benchmark smoke (what CI's tier-2 gate runs)
 	RUN_TIER2=1 ./scripts/test.sh
@@ -33,6 +36,9 @@ bench-serving:  ## coded-serving gate: decode micro + p99-TTFT >= 1.3x over wait
 
 bench-obs:  ## observability overhead gate: tracing-on <= 1.05x tracing-off fused us/step
 	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/obs_overhead.py
+
+bench-resilience:  ## resilience gate: degraded time-to-target <= 1.5x fault-free under 1 crash + 1 hang
+	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/resilience.py
 
 quickstart:
 	PYTHONPATH=src python examples/quickstart.py

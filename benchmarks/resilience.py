@@ -1,0 +1,227 @@
+"""Failure-domain resilience benchmark (DESIGN.md §11 acceptance gate).
+
+Three measurements on a seeded toy regressor at m=10 heter-aware (s=1):
+
+1. **Graceful degradation**: the standard fault mix (one crash + one
+   hang, :func:`repro.resilience.standard_fault_mix`) vs a fault-free
+   control, both driven to the control's 60%-of-run loss.  The claim is
+   simulated **time-to-target-loss**: the faulted run pays detection +
+   eviction + re-admission but must stay within :data:`GATE_DEGRADED_RATIO`
+   of fault-free — the whole point of suspicion-driven eviction over
+   checkpoint-restart.  Standalone (``make bench-resilience``, tier-2 CI)
+   this gate ENFORCES: nonzero exit on regression.
+
+2. **Steps lost**: productive steps sacrificed to the fault mix (skipped
+   or non-finite-guarded), out of the run total.
+
+3. **Detection latency**: conviction step − crash onset over several
+   seeded single-crash runs (p50/p99) — how long a dark worker stalls
+   iterations before the supervisor masks it.
+
+Merges a ``resilience`` section into ``results/BENCH_run.json``.
+Env: BENCH_FAST=1 shrinks steps and seed counts.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+M_WORKERS = 10
+GATE_DEGRADED_RATIO = 1.5  # degraded sim-time-to-target <= 1.5x fault-free
+TARGET_AT_FRACTION = 0.6  # target loss = fault-free loss at 60% of steps
+
+
+def _fast() -> bool:
+    return os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def _steps() -> int:
+    return 40 if _fast() else 80
+
+
+def _toy():
+    import jax
+    import jax.numpy as jnp
+
+    class Toy:
+        d, h = 4, 8
+
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            return {
+                "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32) * 0.3,
+                "w2": jax.random.normal(k2, (self.h, 1), jnp.float32) * 0.3,
+            }
+
+        def weighted_loss(self, params, batch):
+            pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+            return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+    return Toy()
+
+
+def _batch(k, step, mb=2, d=4):
+    r = np.random.default_rng(7000 + step)
+    x = r.normal(size=(k, mb, d)).astype(np.float32)
+    return {"x": x, "y": np.tanh(x.sum(-1)).astype(np.float32)}
+
+
+def _mk_trainer(faults=None, *, fault_seed=0, steps=None):
+    from repro.configs.base import CodingConfig, TrainConfig
+    from repro.core.straggler import NoStragglers
+    from repro.train.trainer import CodedTrainer
+
+    steps = steps if steps is not None else _steps()
+    return CodedTrainer(
+        _toy(),
+        CodingConfig(scheme="heter_aware", s=1),
+        TrainConfig(lr=1e-2, warmup_steps=2, total_steps=steps),
+        m=M_WORKERS, part_mb=2, straggler_model=NoStragglers(),
+        true_speeds=np.linspace(1.0, 2.0, M_WORKERS), comm_time=0.01, rng=3,
+        faults=faults, fault_seed=fault_seed,
+    )
+
+
+def _run_trace(tr, steps):
+    """Drive ``steps`` iterations; return per-step (loss, sim_s, skipped)."""
+    import jax
+
+    state = tr.init_state(jax.random.PRNGKey(0))
+    out = []
+    for _ in range(steps):
+        state, met = tr.step(state, _batch(tr.k, state.step))
+        sim = met["sim_iter_time"]
+        out.append((
+            float(met["loss"]),
+            float(sim) if np.isfinite(sim) else 0.0,
+            bool(met["skipped"]),
+        ))
+    return out
+
+
+def _time_to_target(trace, target):
+    """Cumulative simulated seconds until loss first reaches ``target``
+    (inf if never)."""
+    t = 0.0
+    for loss, sim_s, skipped in trace:
+        t += sim_s
+        if not skipped and np.isfinite(loss) and loss <= target:
+            return t
+    return float("inf")
+
+
+def run_degradation() -> list[dict]:
+    from repro.resilience import standard_fault_mix
+
+    steps = _steps()
+    clean = _run_trace(_mk_trainer(), steps)
+    # target: the loss the fault-free run holds at 60% of its steps
+    target = min(loss for loss, _, sk in clean[: int(steps * TARGET_AT_FRACTION)]
+                 if not sk)
+    t_clean = _time_to_target(clean, target)
+
+    tr = _mk_trainer(standard_fault_mix(M_WORKERS))
+    faulted = _run_trace(tr, steps)
+    t_fault = _time_to_target(faulted, target)
+    sup = tr.supervisor.summary()
+    steps_lost = sum(1 for _, _, sk in faulted if sk)
+    ratio = t_fault / t_clean if np.isfinite(t_fault) else float("inf")
+    return [{
+        "bench": "resilience_degradation", "m": M_WORKERS, "steps": steps,
+        "target_loss": target,
+        "t_target_clean_s": t_clean, "t_target_faulted_s": t_fault,
+        "degraded_ratio": ratio, "steps_lost": steps_lost,
+        "steps_lost_frac": steps_lost / steps,
+        "evictions": sup["evictions"], "readmissions": sup["readmissions"],
+        "m_final": tr.m,
+    }]
+
+
+def run_detection() -> list[dict]:
+    """Single-crash runs over seeds: conviction step − onset step."""
+    from repro.resilience import FaultEvent, FaultSchedule
+
+    n_runs = 3 if _fast() else 6
+    onset = 5
+    latencies = []
+    for seed in range(n_runs):
+        sched = FaultSchedule([
+            FaultEvent(kind="crash", worker=(seed * 3) % M_WORKERS, step=onset),
+        ])
+        tr = _mk_trainer(sched, fault_seed=seed, steps=24)
+        _run_trace(tr, 24)
+        conv = tr.supervisor.convictions
+        if conv:
+            latencies.append(conv[0]["step"] - onset)
+    if not latencies:
+        return [{"bench": "resilience_detection", "runs": n_runs,
+                 "detected": 0, "latency_p50_steps": float("inf"),
+                 "latency_p99_steps": float("inf")}]
+    return [{
+        "bench": "resilience_detection", "runs": n_runs,
+        "detected": len(latencies),
+        "latency_p50_steps": float(np.percentile(latencies, 50)),
+        "latency_p99_steps": float(np.percentile(latencies, 99)),
+        "latency_max_steps": float(np.max(latencies)),
+    }]
+
+
+def run() -> list[dict]:
+    return run_degradation() + run_detection()
+
+
+def derived_claims(rows) -> dict[str, float]:
+    claims = {}
+    for r in rows:
+        if r["bench"] == "resilience_degradation":
+            claims["accept_degraded_ratio"] = r["degraded_ratio"]
+            claims["steps_lost_frac"] = r["steps_lost_frac"]
+            claims["evictions"] = float(r["evictions"])
+            claims["readmissions"] = float(r["readmissions"])
+        elif r["bench"] == "resilience_detection":
+            claims["detect_latency_p50_steps"] = r["latency_p50_steps"]
+            claims["detect_latency_p99_steps"] = r["latency_p99_steps"]
+            claims["detect_rate"] = r["detected"] / max(r["runs"], 1)
+    return claims
+
+
+def _merge_into_bench_run(name: str, claims: dict) -> None:
+    from benchmarks._util import merge_into_bench_run
+
+    merge_into_bench_run(name, claims, fast=_fast())
+
+
+def main() -> int:
+    rows = run()
+    claims = derived_claims(rows)
+    print("bench,key_metrics")
+    for r in rows:
+        if r["bench"] == "resilience_degradation":
+            print(f"resilience_degradation,ratio={r['degraded_ratio']:.2f}x "
+                  f"t_clean={r['t_target_clean_s']:.2f}s "
+                  f"t_faulted={r['t_target_faulted_s']:.2f}s "
+                  f"steps_lost={r['steps_lost']}/{r['steps']} "
+                  f"evict={r['evictions']} readmit={r['readmissions']} "
+                  f"m_final={r['m_final']}")
+        elif r["bench"] == "resilience_detection":
+            print(f"resilience_detection,detected={r['detected']}/{r['runs']} "
+                  f"p50={r['latency_p50_steps']:.1f} "
+                  f"p99={r['latency_p99_steps']:.1f} steps")
+    _merge_into_bench_run("resilience", claims)
+    ratio = claims.get("accept_degraded_ratio", float("inf"))
+    if not ratio <= GATE_DEGRADED_RATIO:
+        print(f"GATE FAIL: degraded time-to-target {ratio:.2f}x fault-free "
+              f"> {GATE_DEGRADED_RATIO}x under the standard fault mix",
+              file=sys.stderr)
+        return 1
+    print(f"# gate OK: degraded time-to-target {ratio:.2f}x fault-free "
+          f"<= {GATE_DEGRADED_RATIO}x (1 crash + 1 hang at m={M_WORKERS})",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

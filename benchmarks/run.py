@@ -21,7 +21,7 @@ def _fast() -> bool:
 def main() -> None:
     from benchmarks import fig2_delay, fig3_clusters, fig4_convergence, fig5_resource_usage
     from benchmarks import fig6_approx, kernels_bench, obs_overhead, roofline_table
-    from benchmarks import scaling, serving, steptime
+    from benchmarks import resilience, scaling, serving, steptime
 
     t0 = time.time()
     all_rows = []
@@ -106,6 +106,14 @@ def main() -> None:
     claims = serving.derived_claims(rows)
     all_rows += rows
     summary.append(("serving", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
+
+    # --- resilience: graceful degradation under faults (DESIGN.md §11) ---
+    t = time.time()
+    rows = resilience.run()
+    claims = resilience.derived_claims(rows)
+    all_rows += rows
+    summary.append(("resilience", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- observability: tracing overhead gate (DESIGN.md §10) ---

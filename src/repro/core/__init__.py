@@ -63,8 +63,12 @@ from repro.core.simulator import (
     ArrivalStream,
     ChurnSchedule,
     ClusterSim,
+    FaultEvent,
+    FaultSchedule,
+    FaultyClusterSim,
     MembershipEvent,
     PartitionTimes,
+    mask_workers,
     theoretical_optimal_time,
 )
 from repro.core.straggler import (
@@ -120,8 +124,12 @@ __all__ = [
     "ArrivalStream",
     "ChurnSchedule",
     "ClusterSim",
+    "FaultEvent",
+    "FaultSchedule",
+    "FaultyClusterSim",
     "MembershipEvent",
     "PartitionTimes",
+    "mask_workers",
     "theoretical_optimal_time",
     "ComposedModel",
     "FaultModel",

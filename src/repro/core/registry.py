@@ -256,11 +256,22 @@ class GradientCode(abc.ABC):
         """
         c = self._check_resize_args(c, old_of_new)
         prev = self.scheme
+        # the rebuild can reject the new worker set (e.g. structural
+        # divisibility at the shrunk m) — snapshot so a failed transition
+        # leaves the code EXACTLY as it was, RNG included (a consumed draw
+        # would silently desync future rebuilds from a bit-exact resume)
+        saved = (self.m, self.requested_k, self.c,
+                 copy.deepcopy(self._rng.bit_generator.state))
         self.m = len(old_of_new)
         if self.structural_k:
             self.requested_k = self.m
         self.c = c
-        self.scheme = self._build_tracked(c)
+        try:
+            self.scheme = self._build_tracked(c)
+        except Exception:
+            self.m, self.requested_k, self.c = saved[:3]
+            self._rng.bit_generator.state = saved[3]
+            raise
         self._reset_decode_cache()
         self._membership_epoch += 1
         return MembershipStats(

@@ -31,13 +31,19 @@ __all__ = [
     "ArrivalEvent",
     "ArrivalStream",
     "ChurnSchedule",
+    "FaultEvent",
+    "FaultSchedule",
+    "FaultyClusterSim",
     "IterationResult",
     "MembershipEvent",
     "PartitionTimes",
     "RunResult",
     "ClusterSim",
+    "mask_workers",
     "theoretical_optimal_time",
 ]
+
+FAULT_KINDS = ("crash", "hang", "flaky", "corrupt")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +219,28 @@ class PartitionTimes:
         for ev in self.stream(deadline):
             if ev.partition is None:
                 yield ev.t, ev.worker
+
+
+def mask_workers(ptimes: PartitionTimes, workers) -> PartitionTimes:
+    """Erasure view of an iteration's clocks: treat ``workers``' uploads as
+    never arriving (all clocks → ∞).  This is how a convicted worker is
+    masked out of the decodable set (DESIGN.md §11) and how a dead serving
+    replica is dropped from the answerable subset — every downstream
+    consumer (support/work queries, streams, decode resolution) already
+    guards on finiteness, so the erased worker simply stops existing as an
+    information source."""
+    drop = {int(w) for w in workers}
+    if not drop:
+        return ptimes
+    if any(not 0 <= w < ptimes.m for w in drop):
+        raise ValueError(f"mask ids out of range [0, {ptimes.m}): {sorted(drop)}")
+    times = tuple(
+        np.full_like(t, np.inf) if w in drop else t
+        for w, t in enumerate(ptimes.times)
+    )
+    finish = ptimes.finish.copy()
+    finish[sorted(drop)] = np.inf
+    return dataclasses.replace(ptimes, times=times, finish=finish)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -413,3 +441,272 @@ class ClusterSim:
             failures=failures,
             iters=tuple(iters),
         )
+
+
+# ---------------------------------------------------------------------------
+# fault injection (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected failure on one worker (DESIGN.md §11 taxonomy).
+
+    Attributes:
+      kind: ``crash`` (finish → ∞ from ``step`` onward, permanent),
+        ``hang`` (∞ for ``duration`` steps, then recovers), ``flaky``
+        (each step in the window the upload is lost with prob ``prob``;
+        retried up to ``retries`` times with exponential backoff — a step
+        whose whole retry budget is lost arrives never), or ``corrupt``
+        (clocks untouched; the coded payload is non-finite with prob
+        ``prob`` per step in the window).
+      worker: ORIGINAL worker id — the index at schedule-creation time.
+        Membership transitions compact current indices, but a fault follows
+        the physical node, so the schedule is keyed by original identity
+        (:class:`FaultyClusterSim` maintains the mapping).
+      step: onset training step.
+      duration: window length in steps (hang/flaky/corrupt); ``None`` means
+        open-ended (and is invalid for hang, which must end to recover).
+      prob: per-upload loss probability (flaky) / per-step corruption
+        probability (corrupt).
+      retries: flaky only — bounded retry budget per step.
+      backoff: flaky only — base retry delay in (simulated) seconds; the
+        r-th retry waits ``backoff·2^(r−1)``, so a step that succeeded after
+        f lost attempts lands ``backoff·(2^f − 1)`` late.
+    """
+
+    kind: str
+    worker: int
+    step: int
+    duration: int | None = None
+    prob: float = 1.0
+    retries: int = 2
+    backoff: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; choose from {FAULT_KINDS}")
+        if self.worker < 0 or self.step < 0:
+            raise ValueError(f"fault worker/step must be >= 0: {self}")
+        if self.kind == "hang" and (self.duration is None or self.duration <= 0):
+            raise ValueError(f"hang needs a positive duration (it must end to recover): {self}")
+        if self.duration is not None and self.duration <= 0:
+            raise ValueError(f"fault duration must be positive: {self}")
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"fault prob must be in [0, 1]: {self}")
+        if self.retries < 0 or self.backoff < 0:
+            raise ValueError(f"fault retries/backoff must be >= 0: {self}")
+
+    def active(self, step: int) -> bool:
+        """Is the fault live at ``step``?  Crash never ends."""
+        if step < self.step:
+            return False
+        if self.kind == "crash":
+            return True
+        return self.duration is None or step < self.step + self.duration
+
+
+class FaultSchedule:
+    """Ordered fault events keyed by ORIGINAL worker id — the injected
+    counterpart of a fleet's failure log.  :class:`FaultyClusterSim` drains
+    it per step; an empty schedule costs nothing."""
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        self.events = tuple(sorted(events, key=lambda e: (e.step, e.worker)))
+        self._by_worker: dict[int, list[FaultEvent]] = {}
+        for ev in self.events:
+            self._by_worker.setdefault(ev.worker, []).append(ev)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def for_worker(self, orig: int) -> tuple[FaultEvent, ...]:
+        return tuple(self._by_worker.get(int(orig), ()))
+
+    def crashed(self, orig: int, step: int) -> bool:
+        return any(
+            ev.kind == "crash" and step >= ev.step for ev in self.for_worker(orig)
+        )
+
+    def hang_recovered(self, orig: int, step: int) -> bool:
+        """The worker hung, every hang window has ended by ``step``, and it
+        is not (also) crashed — the external "node is back" signal a real
+        cluster manager would deliver, which drives re-admission."""
+        hangs = [ev for ev in self.for_worker(orig) if ev.kind == "hang"]
+        if not hangs or self.crashed(orig, step):
+            return False
+        return all(step >= ev.step + ev.duration for ev in hangs)
+
+
+class FaultyClusterSim(ClusterSim):
+    """A :class:`ClusterSim` whose per-iteration clocks and payloads are
+    perturbed by a :class:`FaultSchedule` (DESIGN.md §11).
+
+    Timing faults (crash/hang/flaky) perturb :meth:`partition_times` — and
+    therefore everything the arrival-driven control plane sees.  Corruption
+    is a *payload* fault: clocks are untouched and the step's corrupted
+    CURRENT worker indices are published via :meth:`corrupted_now` for the
+    trainer to poison the decode with (the clock/math split mirrors the
+    rest of the stack).  ``iteration()``/``run()`` keep the base-class
+    fault-free clocks — the trainer path goes through ``partition_times``
+    exclusively.
+
+    Fault sampling is derived per ``(seed, step, original-worker)`` — not
+    from a mutable stream — so a resumed run replays the identical fault
+    realization (bit-exact recovery is property-tested).
+
+    The schedule is keyed by original worker id; membership transitions
+    call :meth:`on_membership` (the ElasticController does this in
+    ``_transition``) to keep the current→original mapping live.  A
+    re-admitted worker re-enters under its original id via
+    :meth:`queue_join_orig`, so any remaining fault windows follow it.
+    """
+
+    def __init__(
+        self,
+        scheme,
+        c: np.ndarray,
+        comm_time: float = 0.0,
+        wait_for_all: bool = False,
+        churn: "ChurnSchedule | None" = None,
+        schedule: FaultSchedule | None = None,
+        seed: int = 0,
+    ):
+        super().__init__(scheme, c, comm_time=comm_time, wait_for_all=wait_for_all, churn=churn)
+        self.schedule = schedule if schedule is not None else FaultSchedule(())
+        self._seed = int(seed)
+        self._step = 0
+        self.orig_of_cur: list[int] = list(range(self.scheme.m))
+        self._next_orig = self.scheme.m
+        self._queued_origs: list[int] = []
+        # per-step manifests, rebuilt by each partition_times call
+        self.last_faults: list[dict] = []
+        self.last_retries: dict[int, int] = {}  # cur idx -> lost uploads retried
+        self._corrupt_now: frozenset[int] = frozenset()
+
+    # -- identity plumbing ---------------------------------------------------
+
+    def begin_step(self, step: int) -> None:
+        """Install the training step the next ``partition_times`` perturbs
+        for (the trainer calls this at the top of every step)."""
+        self._step = int(step)
+
+    def cur_index(self, orig: int) -> int | None:
+        """Current index of an original worker id (None if evicted)."""
+        try:
+            return self.orig_of_cur.index(int(orig))
+        except ValueError:
+            return None
+
+    def queue_join_orig(self, orig: int) -> None:
+        """The next joining worker re-enters under this original id (the
+        re-admission path) instead of being allocated a fresh identity."""
+        self._queued_origs.append(int(orig))
+
+    def on_membership(self, old_of_new: Sequence[int | None]) -> None:
+        """Track a membership transition: survivors keep their original id,
+        joiners take a queued re-admission id or a fresh one."""
+        new: list[int] = []
+        for o in old_of_new:
+            if o is not None:
+                new.append(self.orig_of_cur[o])
+            elif self._queued_origs:
+                new.append(self._queued_origs.pop(0))
+            else:
+                new.append(self._next_orig)
+                self._next_orig += 1
+        self.orig_of_cur = new
+
+    # -- perturbed clocks ----------------------------------------------------
+
+    def _fault_rng(self, step: int, orig: int, salt: int) -> np.random.Generator:
+        # keyed by (seed, step, worker, fault-kind): deterministic under
+        # resume AND independent of membership/enumeration order
+        return np.random.default_rng([self._seed, int(step), int(orig), salt])
+
+    def corrupted_now(self) -> frozenset[int]:
+        """CURRENT worker indices whose payload is corrupt this step (as of
+        the last ``partition_times`` call)."""
+        return self._corrupt_now
+
+    def partition_times(self, profile: StragglerProfile) -> PartitionTimes:
+        pt = super().partition_times(profile)
+        self.last_faults = []
+        self.last_retries = {}
+        corrupt: set[int] = set()
+        if not len(self.schedule):
+            self._corrupt_now = frozenset()
+            return pt
+        step = self._step
+        times = list(pt.times)
+        finish = pt.finish.copy()
+        touched = False
+        for w, orig in enumerate(self.orig_of_cur):
+            dead_kind: str | None = None
+            delay = 0.0
+            for ev in self.schedule.for_worker(orig):
+                if not ev.active(step):
+                    continue
+                if ev.kind in ("crash", "hang"):
+                    dead_kind = ev.kind if dead_kind != "crash" else dead_kind
+                elif ev.kind == "flaky":
+                    rng = self._fault_rng(step, orig, 2)
+                    lost = 0
+                    while lost <= ev.retries and rng.random() < ev.prob:
+                        lost += 1
+                    if lost > ev.retries:
+                        dead_kind = dead_kind or "flaky"
+                        self.last_retries[w] = ev.retries
+                        self.last_faults.append(
+                            {"worker": w, "orig": orig, "kind": "flaky",
+                             "lost": lost, "recovered": False}
+                        )
+                    elif lost:
+                        delay += ev.backoff * (2.0 ** lost - 1.0)
+                        self.last_retries[w] = lost
+                        self.last_faults.append(
+                            {"worker": w, "orig": orig, "kind": "flaky",
+                             "lost": lost, "recovered": True}
+                        )
+                elif ev.kind == "corrupt":
+                    rng = self._fault_rng(step, orig, 3)
+                    if rng.random() < ev.prob:
+                        corrupt.add(w)
+                        self.last_faults.append(
+                            {"worker": w, "orig": orig, "kind": "corrupt"}
+                        )
+            if dead_kind in ("crash", "hang"):
+                self.last_faults.append({"worker": w, "orig": orig, "kind": dead_kind})
+            if dead_kind is not None:
+                times[w] = np.full_like(times[w], np.inf)
+                finish[w] = np.inf
+                touched = True
+            elif delay > 0.0:
+                times[w] = times[w] + delay
+                finish[w] = finish[w] + delay
+                touched = True
+        self._corrupt_now = frozenset(corrupt)
+        if not touched:
+            return pt
+        return dataclasses.replace(pt, times=tuple(times), finish=finish)
+
+    # -- checkpoint state ----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "step": int(self._step),
+            "orig_of_cur": [int(o) for o in self.orig_of_cur],
+            "next_orig": int(self._next_orig),
+            "queued_origs": [int(o) for o in self._queued_origs],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._step = int(state.get("step", 0))
+        self.orig_of_cur = [int(o) for o in state["orig_of_cur"]]
+        self._next_orig = int(state["next_orig"])
+        self._queued_origs = [int(o) for o in state.get("queued_origs", [])]
+        if len(self.orig_of_cur) != self.scheme.m:
+            raise ValueError(
+                f"restored orig_of_cur has {len(self.orig_of_cur)} entries "
+                f"for m={self.scheme.m} workers"
+            )

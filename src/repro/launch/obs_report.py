@@ -27,7 +27,8 @@ import json
 from repro.obs.stats import Summary
 from repro.obs.straggler import StragglerForensics
 
-__all__ = ["load_records", "phase_table", "blame_report", "render", "main"]
+__all__ = ["load_records", "phase_table", "blame_report", "fault_section",
+           "render", "main"]
 
 
 def load_records(path: str) -> list[dict]:
@@ -69,6 +70,14 @@ def blame_report(records: list[dict], top_k: int = 10) -> dict:
         "transitions": fx.transitions,
         "archived_epochs": len(fx.epochs),
     }
+
+
+def fault_section(records: list[dict]) -> dict:
+    """The §11 fault ledger rebuilt from the event log: injected faults,
+    per-worker suspicion timelines, convictions/evictions/re-admissions,
+    retried uploads, and quarantined decode slots (workers by ORIGINAL
+    id)."""
+    return StragglerForensics.from_records(records).fault_report()
 
 
 def _fmt(v, width: int) -> str:
@@ -131,6 +140,43 @@ def main(argv=None) -> None:
         if rep["transitions"]:
             print("\n-- membership transitions --")
             print(render(rep["transitions"]))
+
+    faults = fault_section(records)
+    if any(faults[k] for k in
+           ("faults", "convictions", "suspicion", "retries", "quarantines",
+            "nonfinite_steps")):
+        print("\n== faults ==")
+        kinds: dict[str, int] = {}
+        for f in faults["faults"]:
+            kinds[f["kind"]] = kinds.get(f["kind"], 0) + 1
+        print(
+            "injected: " + (", ".join(f"{k}={n}" for k, n in sorted(kinds.items()))
+                            or "none")
+            + f"; nonfinite_steps={len(faults['nonfinite_steps'])}"
+        )
+        if faults["suspicion"]:
+            print("\n-- suspicion timeline (per worker) --")
+            print(render([
+                {"worker": w, **row} for w, row in faults["suspicion"].items()
+            ]))
+        if faults["convictions"]:
+            print("\n-- convictions --")
+            print(render(faults["convictions"]))
+        if faults["evictions"] or faults["readmissions"]:
+            print("\n-- evictions / re-admissions --")
+            print(render(
+                [{"event": "evict", **r} for r in faults["evictions"]]
+                + [{"event": "readmit", **r} for r in faults["readmissions"]],
+                ["event", "step", "worker"],
+            ))
+        if faults["retries"] or faults["quarantines"]:
+            workers = sorted(set(faults["retries"]) | set(faults["quarantines"]))
+            print("\n-- retries / quarantined slots --")
+            print(render([
+                {"worker": w, "retried_uploads": faults["retries"].get(w, 0),
+                 "quarantines": faults["quarantines"].get(w, 0)}
+                for w in workers
+            ]))
 
 
 if __name__ == "__main__":

@@ -37,6 +37,7 @@ from repro.data.pipeline import SyntheticData
 from repro.models.lm import build_model
 from repro.obs.trace import Tracer
 from repro.optim.adam import adamw_init
+from repro.resilience import parse_fault_spec
 from repro.train.engine import BACKENDS
 from repro.train.trainer import CodedTrainer, TrainerState
 
@@ -95,6 +96,13 @@ def main(argv=None):
                          "object per step + instants) for repro.launch.obs_report")
     ap.add_argument("--trace-capacity", type=int, default=1 << 16,
                     help="flight-recorder ring size (records); oldest dropped beyond it")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="inject failures (DESIGN.md §11), e.g. "
+                         "'crash:3@40,hang:1@20+10,flaky:2@0..100:0.3,"
+                         "corrupt:0@50..60'; enables the fault supervisor "
+                         "(suspicion-driven eviction + re-admission)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="RNG key for flaky/corrupt fault realizations")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -119,10 +127,12 @@ def main(argv=None):
         if (args.trace_out or args.log_jsonl)
         else None
     )
+    faults = parse_fault_spec(args.faults) if args.faults else None
     trainer = CodedTrainer(
         model, coding, tc, m=args.m, part_mb=args.part_mb,
         straggler_model=straggler_from_args(args), true_speeds=speeds, rng=args.seed,
         backend=args.backend, deadline_policy=policy, trace=tracer,
+        faults=faults, fault_seed=args.fault_seed,
     )
     data = SyntheticData(cfg, k=trainer.k, part_mb=args.part_mb, seq_len=args.seq_len, seed=args.seed)
 
@@ -179,6 +189,10 @@ def main(argv=None):
         "deadline_mode": args.deadline_mode,
         "exact_fraction": metrics.get("exact_fraction"),
         "steps_run": max(args.steps - start, 0),
+        **(
+            {"resilience": trainer.supervisor.summary(), "m_final": trainer.m}
+            if trainer.supervisor is not None else {}
+        ),
     }))
 
 

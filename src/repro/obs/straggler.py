@@ -82,6 +82,17 @@ class StragglerForensics:
         self.epochs: list[list[dict]] = []  # archived pre-churn blame tables
         self.rebalances: list[dict] = []
         self.transitions: list[dict] = []
+        # -- fault ledger (DESIGN.md §11): keyed by ORIGINAL worker id and
+        # kept OUTSIDE the per-epoch restart — fault identities survive the
+        # membership transitions they themselves cause
+        self.faults: list[dict] = []  # injected fault realizations
+        self.convictions: list[dict] = []
+        self.fault_evictions: list[dict] = []
+        self.readmissions: list[dict] = []
+        self.suspicion_timeline: dict[int, list[tuple[int, float]]] = {}
+        self.retries: dict[int, int] = {}  # orig -> retried uploads
+        self.quarantines: dict[int, int] = {}  # orig -> repair exclusions
+        self.nonfinite_steps: list[int] = []
         self._start(int(m), true_speeds)
 
     def _start(self, m: int, true_speeds) -> None:
@@ -229,6 +240,61 @@ class StragglerForensics:
         self.epochs.append(self.blame_table())
         self._start(m_after, true_speeds)
 
+    # -- fault ledger (live feed from FaultyClusterSim / FaultSupervisor) ----
+
+    def on_fault(self, step: int, orig: int, kind: str) -> None:
+        self.faults.append({"step": int(step), "worker": int(orig), "kind": kind})
+
+    def on_suspicion(self, step: int, orig: int, suspicion: float) -> None:
+        self.suspicion_timeline.setdefault(int(orig), []).append(
+            (int(step), float(suspicion))
+        )
+
+    def on_conviction(self, step: int, orig: int, reason: str,
+                      suspicion: float) -> None:
+        self.convictions.append({
+            "step": int(step), "worker": int(orig), "reason": reason,
+            "suspicion": float(suspicion),
+        })
+
+    def on_eviction(self, step: int, orig: int) -> None:
+        self.fault_evictions.append({"step": int(step), "worker": int(orig)})
+
+    def on_readmit(self, step: int, orig: int) -> None:
+        self.readmissions.append({"step": int(step), "worker": int(orig)})
+
+    def on_retry(self, step: int, orig: int, n: int) -> None:
+        self.retries[int(orig)] = self.retries.get(int(orig), 0) + int(n)
+
+    def on_quarantine(self, step: int, orig: int) -> None:
+        self.quarantines[int(orig)] = self.quarantines.get(int(orig), 0) + 1
+
+    def on_nonfinite(self, step: int) -> None:
+        self.nonfinite_steps.append(int(step))
+
+    def fault_report(self) -> dict:
+        """The §11 evidence trail: per-worker suspicion peaks + timelines,
+        convictions, evictions/re-admissions, retried uploads, quarantined
+        slots, and non-finite step indices (all workers by ORIGINAL id)."""
+        timeline = {
+            orig: {
+                "peak": max(s for _, s in tl),
+                "last_step": tl[-1][0],
+                "samples": len(tl),
+            }
+            for orig, tl in sorted(self.suspicion_timeline.items())
+        }
+        return {
+            "faults": list(self.faults),
+            "convictions": list(self.convictions),
+            "evictions": list(self.fault_evictions),
+            "readmissions": list(self.readmissions),
+            "suspicion": timeline,
+            "retries": dict(sorted(self.retries.items())),
+            "quarantines": dict(sorted(self.quarantines.items())),
+            "nonfinite_steps": list(self.nonfinite_steps),
+        }
+
     # -- reports -------------------------------------------------------------
 
     def blame_table(self, top_k: int | None = None) -> list[dict]:
@@ -282,4 +348,32 @@ class StragglerForensics:
                 fx.on_membership(
                     int(args.get("step", -1)), int(args.get("m_after", fx.m)), args
                 )
-        return fx if fx is not None else cls(0)
+        if fx is None:
+            fx = cls(0)
+        # second pass: the fault ledger is keyed by original worker id and
+        # independent of the per-epoch tables, so its instants fold in any
+        # order relative to the train.step stream (including before step 0)
+        for rec in records:
+            if rec.get("kind") != "instant":
+                continue
+            name, args = rec.get("name"), rec.get("args", {})
+            step = int(args.get("step", -1))
+            orig = int(args.get("orig", args.get("worker", -1)))
+            if name == "fault.inject":
+                fx.on_fault(step, orig, args.get("kind", "?"))
+            elif name == "fault.suspicion":
+                fx.on_suspicion(step, orig, float(args.get("suspicion", 0.0)))
+            elif name == "fault.convict":
+                fx.on_conviction(step, orig, args.get("reason", "?"),
+                                 float(args.get("suspicion", 0.0)))
+            elif name == "fault.evict":
+                fx.on_eviction(step, orig)
+            elif name == "fault.readmit":
+                fx.on_readmit(step, orig)
+            elif name == "fault.retry":
+                fx.on_retry(step, orig, int(args.get("retries", 1)))
+            elif name == "guard.quarantine":
+                fx.on_quarantine(step, orig)
+            elif name == "guard.nonfinite":
+                fx.on_nonfinite(step)
+        return fx

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.approx.deadline import SLOPolicy
 from repro.core.registry import get_scheme
-from repro.core.simulator import ClusterSim
+from repro.core.simulator import ClusterSim, mask_workers
 from repro.core.straggler import NoStragglers, StragglerModel
 
 __all__ = ["PrefillOutcome", "ReplicaPool"]
@@ -91,10 +91,38 @@ class ReplicaPool:
         self.straggler_model = straggler_model or NoStragglers()
         self.work_ref_tokens = int(work_ref_tokens)
         self.rng = np.random.default_rng(seed)
+        self._dead: set[int] = set()
 
     @property
     def m(self) -> int:
         return int(self.code.m)
+
+    # -- replica death (DESIGN.md §11) --------------------------------------
+
+    @property
+    def dead(self) -> frozenset[int]:
+        """Replica indices currently marked dead."""
+        return frozenset(self._dead)
+
+    def mark_dead(self, ids) -> None:
+        """Mark replicas dead: their shares never arrive, so every
+        subsequent prefill answers from the surviving decodable subset
+        (erasure — with ≤ s dead the decode stays exact; beyond that the
+        SLO policy's best-effort deadline path takes over).  Wait-for-all
+        replication (``t_all``) goes to inf when a dead replica holds
+        shares — the counterfactual a replicated deployment would suffer."""
+        ids = {int(i) for i in ids}
+        if any(not 0 <= i < self.m for i in ids):
+            raise ValueError(f"replica ids out of range [0, {self.m}): {sorted(ids)}")
+        self._dead |= ids
+
+    def revive(self, ids=None) -> None:
+        """Bring replicas back (None = all) — the recovery half of a
+        simulated replica-death drill."""
+        if ids is None:
+            self._dead.clear()
+        else:
+            self._dead -= {int(i) for i in ids}
 
     def prefill(self, n_tokens: int, rng: np.random.Generator | None = None) -> PrefillOutcome:
         """Sample one request's replica clocks and resolve them under the
@@ -102,6 +130,8 @@ class ReplicaPool:
         so callers can report the counterfactual without resampling."""
         rng = rng if rng is not None else self.rng
         ptimes = self.sim.sample_partition_times(self.straggler_model, rng)
+        if self._dead:
+            ptimes = mask_workers(ptimes, sorted(self._dead))
         deadline = self.policy.deadline_for(self.code, self.speeds, self.sim.comm_time)
         t, outcome, used = self.policy.resolve(self.code, ptimes, deadline)
         scale = n_tokens / self.work_ref_tokens

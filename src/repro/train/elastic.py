@@ -27,7 +27,12 @@ from repro.approx.deadline import DeadlinePolicy, StepTick
 from repro.core.codec import Codec
 from repro.obs.trace import NULL_TRACER
 from repro.core.registry import MembershipStats
-from repro.core.simulator import ChurnSchedule, ClusterSim
+from repro.core.simulator import (
+    ChurnSchedule,
+    ClusterSim,
+    FaultSchedule,
+    FaultyClusterSim,
+)
 from repro.core.straggler import StragglerProfile
 from repro.core.throughput import ThroughputEstimator
 
@@ -48,6 +53,9 @@ class ElasticController:
       c_init: optional calibration prior for the estimator.
       policy: stepping policy; None = :meth:`DeadlinePolicy.exact` (the
         paper's exact semantics — same loop, infinite deadline).
+      faults: optional :class:`FaultSchedule` — the sim becomes a
+        :class:`FaultyClusterSim` perturbing clocks/payloads (DESIGN.md
+        §11); ``fault_seed`` keys its deterministic per-step sampling.
     """
 
     def __init__(
@@ -59,6 +67,8 @@ class ElasticController:
         c_init: np.ndarray | None = None,
         policy: DeadlinePolicy | None = None,
         churn: ChurnSchedule | None = None,
+        faults: FaultSchedule | None = None,
+        fault_seed: int = 0,
     ):
         m = codec.m
         self.codec = codec
@@ -69,10 +79,22 @@ class ElasticController:
         self.estimator = ThroughputEstimator(
             m, init=np.asarray(c_init, np.float64) if c_init is not None else np.ones(m)
         )
-        self.sim = ClusterSim(
-            codec.code, self.true_speeds, comm_time=comm_time,
-            wait_for_all=codec.code.wait_for_all, churn=churn,
-        )
+        if faults is not None:
+            self.sim: ClusterSim = FaultyClusterSim(
+                codec.code, self.true_speeds, comm_time=comm_time,
+                wait_for_all=codec.code.wait_for_all, churn=churn,
+                schedule=faults, seed=fault_seed,
+            )
+        else:
+            self.sim = ClusterSim(
+                codec.code, self.true_speeds, comm_time=comm_time,
+                wait_for_all=codec.code.wait_for_all, churn=churn,
+            )
+        # erasure seam (DESIGN.md §11): a FaultSupervisor installs a
+        # PartitionTimes -> PartitionTimes filter here; convicted workers'
+        # arrivals are erased BEFORE the policy resolves, so the decode,
+        # the observation plan, and the forensics all see the masked view
+        self.fault_filter = None
         # highest step whose churn events have been drained: a skipped
         # iteration leaves state.step unchanged, so the trainer asks about
         # the same step again and must NOT get the events twice
@@ -98,6 +120,8 @@ class ElasticController:
         code = self.codec.code
         policy = self.policy
         ptimes = self.sim.partition_times(profile)
+        if self.fault_filter is not None:
+            ptimes = self.fault_filter(ptimes)
         deadline = policy.deadline_for(code, self.estimator.c, self.sim.comm_time)
         tau, outcome, used = policy.resolve(code, ptimes, deadline)
         loads = code.worker_load().astype(np.float64)
@@ -236,6 +260,11 @@ class ElasticController:
             raise
         self.true_speeds = np.asarray(true_speeds_new, dtype=np.float64)
         self.sim.set_speeds(self.true_speeds)
+        # keep the fault layer's current->original identity map live (fault
+        # schedules follow physical nodes across membership transitions)
+        on_mem = getattr(self.sim, "on_membership", None)
+        if on_mem is not None:
+            on_mem(old_of_new)
         # the transition re-ran allocation against the current estimate:
         # that IS an applied rebalance for hysteresis purposes
         self.estimator.mark_applied()

@@ -240,15 +240,26 @@ class StepEngine:
         )
 
     def _adamw(self, params, grads, opt, step):
+        """AdamW apply behind the non-finite payload guard (DESIGN.md §11):
+        a corrupted coded sum (NaN/Inf anywhere in the decoded gradient —
+        global_norm is finite iff every leaf is) must never touch params or
+        optimizer moments.  The guard is in-jit (no recompiles, no extra
+        readback): grads are zeroed and the update reverted via selects, so
+        the finite path is bit-identical to the unguarded step and the
+        caller detects the skip from the returned non-finite grad_norm."""
         tc = self.tc
         lr = self._lr(step)
         gnorm = global_norm(grads)
-        params, opt = adamw_update(
+        ok = jnp.isfinite(gnorm)
+        grads = jax.tree.map(lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads)
+        new_params, new_opt = adamw_update(
             params, grads, opt,
             lr=lr, beta1=tc.beta1, beta2=tc.beta2, eps=tc.eps,
             weight_decay=tc.weight_decay, grad_clip=tc.grad_clip,
         )
-        return params, opt, gnorm, lr
+        new_params = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_params, params)
+        new_opt = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_opt, opt)
+        return new_params, new_opt, gnorm, lr
 
     def _device_batch(self, pbatch, a, support, pids, coeff, mask):
         """In-jit pack + weights: the device-resident twin of _flat_batch."""
@@ -301,6 +312,16 @@ class StepEngine:
             return params, opt, {"grad_norm": gnorm, "lr": lr}
 
         return apply_fn
+
+    def reset_error_feedback(self) -> None:
+        """Zero the spmd backend's per-worker error-feedback residuals.
+
+        Called after a non-finite decode (a corrupt payload pollutes the
+        residual of every worker in that step's psum) and harmless
+        otherwise; membership changes already reset via the codec-version
+        key in :meth:`_spmd_gradients`."""
+        if self.backend == "spmd" and self._err is not None:
+            self._err = jnp.zeros_like(self._err)
 
     # -- gradients (backend seam, used directly by the equivalence tests) ---
 

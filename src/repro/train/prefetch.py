@@ -13,11 +13,20 @@ is real even in-process.
 ``batch(step) -> pytree`` (e.g. :class:`~repro.data.pipeline.SyntheticData`)
 works, and the yielded leaves are committed device arrays the engine
 consumes without further copies.
+
+Failure propagation (DESIGN.md §11): a raising ``batch()`` on the worker
+thread ships a poison pill through the queue and is re-raised on the
+consumer thread with the ORIGINAL exception and traceback — never a hang,
+never a silent early stop.  Conversely, a consumer that abandons the
+iterator mid-run (break, exception, generator GC) signals the worker to
+stop and joins it, so no thread outlives the loop.
 """
 
 from __future__ import annotations
 
-from concurrent.futures import ThreadPoolExecutor
+import queue
+import sys
+import threading
 from typing import Any, Iterator, Protocol
 
 import jax
@@ -25,6 +34,18 @@ import jax
 from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = ["DevicePrefetcher"]
+
+_DONE = object()  # worker sentinel: range exhausted
+
+
+class _Poison:
+    """Worker-thread failure shipped to the consumer for re-raising."""
+
+    __slots__ = ("exc", "tb")
+
+    def __init__(self, exc: BaseException, tb):
+        self.exc = exc
+        self.tb = tb
 
 
 class BatchSource(Protocol):
@@ -35,7 +56,8 @@ class DevicePrefetcher:
     """Iterate ``(step, device_batch)`` over ``[start, stop)`` with one
     batch of lookahead built on a worker thread: while the consumer runs
     step t, the thread generates and uploads batch t+1 (double buffering —
-    one slot in flight keeps peak memory at 2 batches).
+    one slot in flight keeps peak memory at ~2 batches, enforced by a
+    semaphore the consumer releases as it takes each batch).
 
     With a tracer installed (DESIGN.md §10), each background
     generate+upload lands as a ``prefetch.upload`` span on its own
@@ -66,15 +88,44 @@ class DevicePrefetcher:
             tr.span_at("prefetch.upload", t0, tr.clock(), clock="wall", tid=1, step=step)
         return out
 
+    def _worker(self, q: queue.Queue, slots: threading.Semaphore,
+                stop_ev: threading.Event) -> None:
+        try:
+            for step in range(self.start, self.stop):
+                # bound the lookahead WITHOUT blocking forever: an abandoned
+                # consumer sets stop_ev instead of draining the queue
+                while not slots.acquire(timeout=0.1):
+                    if stop_ev.is_set():
+                        return
+                if stop_ev.is_set():
+                    return
+                q.put((step, self._load(step)))
+            q.put(_DONE)
+        except BaseException as exc:  # noqa: BLE001 - shipped to the consumer
+            q.put(_Poison(exc, sys.exc_info()[2]))
+
     def __iter__(self) -> Iterator[tuple[int, Any]]:
         if self.start >= self.stop:
             return
-        with ThreadPoolExecutor(max_workers=1) as pool:
-            fut = pool.submit(self._load, self.start)
-            for step in range(self.start, self.stop):
-                cur = fut.result()
-                if step + 1 < self.stop:
-                    # enqueue generation+upload of the NEXT batch before
-                    # yielding — it runs while the consumer computes `step`
-                    fut = pool.submit(self._load, step + 1)
-                yield step, cur
+        q: queue.Queue = queue.Queue()  # unbounded: worker puts never block
+        slots = threading.Semaphore(2)  # current + one lookahead
+        stop_ev = threading.Event()
+        worker = threading.Thread(
+            target=self._worker, args=(q, slots, stop_ev),
+            name="prefetch", daemon=True,
+        )
+        worker.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _DONE:
+                    return
+                slots.release()  # the previous batch slot is free again
+                if isinstance(item, _Poison):
+                    # surface the worker's failure as the ORIGINAL exception
+                    # with the worker-side traceback attached
+                    raise item.exc.with_traceback(item.tb)
+                yield item
+        finally:
+            stop_ev.set()
+            worker.join(timeout=5.0)

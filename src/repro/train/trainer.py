@@ -41,11 +41,13 @@ from repro.approx.deadline import DeadlinePolicy
 from repro.configs.base import CodingConfig, TrainConfig
 from repro.core.codec import Codec
 from repro.core.registry import MembershipStats
-from repro.core.simulator import ChurnSchedule
+from repro.core.decoding import DecodeOutcome
+from repro.core.simulator import ChurnSchedule, FaultSchedule
 from repro.core.straggler import NoStragglers, StragglerModel, StragglerProfile
 from repro.models.lm import LM
 from repro.obs.straggler import StragglerForensics
 from repro.obs.trace import NULL_TRACER, Tracer
+from repro.resilience.supervisor import FaultSupervisor
 from repro.train.elastic import ElasticController
 from repro.train.engine import StepEngine, TrainerState
 from repro.train.prefetch import DevicePrefetcher
@@ -81,6 +83,9 @@ class CodedTrainer:
         deadline_policy: DeadlinePolicy | None = None,
         churn: ChurnSchedule | None = None,
         trace: Tracer | None = None,
+        faults: FaultSchedule | None = None,
+        fault_seed: int = 0,
+        supervisor: FaultSupervisor | None = None,
     ):
         self.model = model
         self.coding = coding
@@ -98,9 +103,19 @@ class CodedTrainer:
             coding_axes=coding.coding_axes if mesh is not None else ("data",),
             compress=coding.compress,
         )
+        # resilience (DESIGN.md §11): a fault schedule makes the controller's
+        # sim a FaultyClusterSim; a supervisor closes the detect/evict loop.
+        # Either implies the other — a bare supervisor gets an empty schedule
+        # (real payload faults still convict), a bare schedule gets a default
+        # supervisor.
+        if supervisor is not None and faults is None:
+            faults = FaultSchedule(())
+        if faults is not None and supervisor is None:
+            supervisor = FaultSupervisor()
+        self.supervisor = supervisor
         self.elastic = ElasticController(
             self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init,
-            policy=deadline_policy, churn=churn,
+            policy=deadline_policy, churn=churn, faults=faults, fault_seed=fault_seed,
         )
         # -- observability (DESIGN.md §10): one tracer threaded through the
         # whole stack.  Off (the default) it is the NULL singleton and every
@@ -115,6 +130,10 @@ class CodedTrainer:
             StragglerForensics(m, self.elastic.true_speeds)
             if self.tracer.enabled else None
         )
+        if self.supervisor is not None:
+            self.supervisor.bind(
+                self.elastic, tracer=self.tracer, forensics=self.forensics
+            )
 
     # convenience views (stable public surface; tests/examples rely on them)
     k = property(lambda self: self.codec.k)
@@ -186,6 +205,174 @@ class CodedTrainer:
         self._check_membership_supported()
         return self.apply_membership(self.elastic.remove_workers(ids))
 
+    # -- resilience: eviction drain + non-finite payload guard (§11) ---------
+
+    def _drain_fault_actions(self, step: int) -> None:
+        """Apply the supervisor's pending membership repairs BEFORE the
+        step: evict convicted workers through the elastic path (one
+        ``Codec.version`` bump each, via the membership remap), re-admit
+        recovered hang victims under their original identity.  An
+        infeasible eviction (m would reach s, a structural scheme rejects
+        the shrunk m, the spmd backend's fixed mesh) leaves the worker
+        masked — degraded, not crashed."""
+        sup = self.supervisor
+        sim = self.elastic.sim
+        tr = self.tracer
+        if self.engine.backend == "spmd":
+            return  # fixed mesh: convicted workers stay masked (erasure only)
+        for orig in sup.eviction_queue():
+            cur = sim.cur_index(orig)
+            if cur is None or self.m - 1 <= self.codec.s:
+                continue
+            speed = float(self.elastic.true_speeds[cur])
+            c_est = float(self.elastic.estimator.c[cur])
+            try:
+                self.remove_workers([cur])
+            except (ValueError, NotImplementedError):
+                continue  # remap infeasible at m-1: stay masked
+            sup.note_evicted(step, orig, speed, c_est)
+            if tr.enabled:
+                tr.instant("fault.evict", step=int(step), worker=int(orig),
+                           m_after=int(self.m))
+            if self.forensics is not None:
+                self.forensics.on_eviction(step, orig)
+                self.forensics.on_membership(
+                    step, self.m, {"fault_evict": int(orig)},
+                    self.elastic.true_speeds,
+                )
+        for orig, speed, c_est in sup.readmit_queue(step):
+            sim.queue_join_orig(orig)
+            try:
+                self.add_workers([speed], c_init=[c_est])
+            except (ValueError, NotImplementedError):
+                sim._queued_origs.remove(orig)  # leave it evicted
+                continue
+            sup.note_readmitted(step, orig)
+            if tr.enabled:
+                tr.instant("fault.readmit", step=int(step), worker=int(orig),
+                           m_after=int(self.m))
+            if self.forensics is not None:
+                self.forensics.on_readmit(step, orig)
+                self.forensics.on_membership(
+                    step, self.m, {"fault_readmit": int(orig)},
+                    self.elastic.true_speeds,
+                )
+
+    @staticmethod
+    def _used_workers(dec: DecodeOutcome) -> list[int]:
+        """CURRENT indices with a live decode coefficient (NaN counts: a
+        poisoned coefficient IS a participating corrupt payload)."""
+        a = np.asarray(dec.a, np.float64)
+        return [w for w in range(a.shape[0]) if not abs(a[w]) <= 1e-12]
+
+    @staticmethod
+    def _poison_outcome(
+        dec: DecodeOutcome, corrupt_cur: tuple[int, ...]
+    ) -> DecodeOutcome:
+        """Model corrupted coded payloads entering the decode: NaN the
+        corrupt workers' decode coefficients, so every backend's decoded
+        gradient goes non-finite exactly when a corrupt payload is actually
+        *used* (a zero-coefficient worker never entered the sum)."""
+        a = np.asarray(dec.a, np.float64)
+        hit = [w for w in corrupt_cur if w < a.shape[0] and abs(a[w]) > 1e-12]
+        if not hit:
+            return dec
+        a = a.copy()
+        a[hit] = np.nan
+        return dataclasses.replace(dec, a=a)
+
+    def _degraded_outcome(
+        self, tick, quarantined: set[int]
+    ) -> DecodeOutcome | None:
+        """Re-decode the step excluding the quarantined workers (the repair
+        rung of the degradation ladder).  None when nothing decodable
+        remains under the current policy."""
+        oc = tick.outcome
+        if oc.support is not None:
+            sup_mask = np.array(oc.support, dtype=oc.support.dtype, copy=True)
+            sup_mask[sorted(quarantined), :] = 0
+            deg = self.codec.decode_partial(sup_mask)
+        else:
+            finish = tick.ptimes.finish
+            tau = float(tick.T)
+            avail = [
+                w for w in range(finish.shape[0])
+                if w not in quarantined
+                and np.isfinite(finish[w]) and finish[w] <= tau + 1e-12
+            ]
+            if not avail:
+                return None
+            deg = self.codec.decode_outcome(avail)
+        if deg.n_used == 0:
+            return None
+        if not deg.exact and not self.elastic.policy.step_inexact:
+            return None
+        return deg
+
+    def _guarded_step(
+        self,
+        state: TrainerState,
+        partition_batch: dict[str, np.ndarray],
+        tick,
+        outcome: DecodeOutcome,
+        corrupt_cur: tuple[int, ...],
+    ) -> tuple[TrainerState, dict[str, float]]:
+        """``engine.step`` behind the non-finite payload guard.
+
+        The in-jit guard already kept params/opt at their old values when
+        the decoded gradient went non-finite — but the fused path DONATES
+        the input buffers, so the old values survive only in the RETURNED
+        arrays; every roll-back below therefore rebuilds the state from the
+        returned buffers with the step counter un-bumped.  With a
+        supervisor, up to ``max_repairs`` re-decodes excluding the most
+        suspect participant are attempted (quarantine → repair); otherwise
+        (or when repair fails) the step is skipped and reported via
+        ``skipped_nonfinite``."""
+        tr = self.tracer
+        sup = self.supervisor
+        dec = self._poison_outcome(outcome, corrupt_cur)
+        new_state, metrics = self.engine.step(state, partition_batch, dec)
+        if np.isfinite(metrics["grad_norm"]):
+            if sup is not None:
+                sup.on_clean(self._used_workers(dec))
+            return new_state, {**metrics, "skipped_nonfinite": 0.0}
+        # --- non-finite decode: quarantine-and-repair, else skip ---
+        step = state.step
+        self.engine.reset_error_feedback()  # a corrupt psum pollutes residuals
+        if tr.enabled:
+            tr.instant("guard.nonfinite", step=int(step))
+        if self.forensics is not None:
+            self.forensics.on_nonfinite(step)
+        used = self._used_workers(dec)
+        if sup is not None:
+            sup.on_nonfinite(step, used)
+            quarantined: set[int] = set()
+            for _ in range(sup.max_repairs):
+                cands = sup.repair_candidates(used, exclude_cur=quarantined)
+                if not cands:
+                    break
+                quarantined.add(cands[0])
+                sup.on_quarantine(step, cands[0])
+                deg = self._degraded_outcome(tick, quarantined)
+                if deg is None:
+                    break
+                deg = self._poison_outcome(
+                    deg, tuple(w for w in corrupt_cur if w not in quarantined)
+                )
+                rolled = TrainerState(new_state.params, new_state.opt, step)
+                new_state, metrics = self.engine.step(rolled, partition_batch, deg)
+                if np.isfinite(metrics["grad_norm"]):
+                    sup.on_repair_success(step, cands[0])
+                    sup.on_clean(self._used_workers(deg))
+                    return new_state, {
+                        **metrics, "skipped_nonfinite": 0.0, "repaired": 1.0,
+                    }
+                self.engine.reset_error_feedback()
+        return (
+            TrainerState(new_state.params, new_state.opt, step),
+            {**_SKIP_METRICS, "skipped_nonfinite": 1.0},
+        )
+
     def step(
         self, state: TrainerState, partition_batch: dict[str, np.ndarray],
         profile: StragglerProfile | None = None,
@@ -197,6 +384,13 @@ class CodedTrainer:
         tr = self.tracer
         traced = tr.enabled  # ONE attribute check when tracing is off
         t_step0 = tr.clock() if traced else 0.0
+        sup = self.supervisor
+        if sup is not None:
+            # the fault layer perturbs clocks per training step; pending
+            # convictions are repaired (evict/re-admit) BEFORE the step so
+            # the new worker set's clocks and decode see the transition
+            self.elastic.sim.begin_step(state.step)
+            self._drain_fault_actions(state.step)
         churn_stats = None
         if self.elastic.sim.membership_events(state.step):
             self._check_membership_supported()
@@ -238,6 +432,20 @@ class CodedTrainer:
                        step=int(state.step))
             loads_now = self.elastic.codec.code.worker_load().astype(np.float64)
         outcome = tick.outcome
+        corrupt_cur: tuple[int, ...] = ()
+        if sup is not None:
+            sim = self.elastic.sim
+            if traced:
+                for f in sim.last_faults:
+                    tr.instant("fault.inject", step=int(state.step), **f)
+            if self.forensics is not None:
+                for f in sim.last_faults:
+                    self.forensics.on_fault(state.step, int(f["orig"]), f["kind"])
+            sup.observe_timing(
+                state.step, tick,
+                self.elastic.codec.code.worker_load().astype(np.float64),
+            )
+            corrupt_cur = tuple(sorted(sim.corrupted_now()))
         self._steps_taken += 1
         self._exact_steps += int(outcome.exact)
 
@@ -268,13 +476,16 @@ class CodedTrainer:
             self.elastic.observe(tick)
             out = {
                 **_SKIP_METRICS, "skipped": 1.0, **base, "n_used": 0.0,
+                "skipped_nonfinite": 0.0,
                 "exact_fraction": self._exact_fraction(),
             }
             if traced:
                 self._record_step(state.step, tick, loads_now, out, t_step0)
             return state, out
 
-        new_state, metrics = self.engine.step(state, partition_batch, outcome)
+        new_state, metrics = self._guarded_step(
+            state, partition_batch, tick, outcome, corrupt_cur
+        )
 
         # --- throughput estimation + elastic re-encode ---
         t0 = tr.clock() if traced else 0.0
@@ -285,7 +496,7 @@ class CodedTrainer:
         out = {
             **metrics, **base,
             "n_used": float(tick.n_used),
-            "skipped": 0.0,
+            "skipped": float(metrics.get("skipped_nonfinite", 0.0) > 0),
             "exact_fraction": self._exact_fraction(),
         }
         if self.elastic.maybe_rebalance(new_state.step, every=self.coding.rebalance_every):
@@ -358,6 +569,8 @@ class CodedTrainer:
             n_stragglers=float(out["n_stragglers"]),
             exact_fraction=float(out["exact_fraction"]),
             rebalanced=float(out.get("rebalanced", 0.0)), m=float(self.m),
+            skipped_nonfinite=float(out.get("skipped_nonfinite", 0.0)),
+            repaired=float(out.get("repaired", 0.0)),
             finish=np.asarray(tick.ptimes.finish, np.float64).tolist(),
             load=loads.tolist(),
             c_est=np.asarray(self.elastic.estimator.c, np.float64).tolist(),
@@ -383,6 +596,15 @@ class CodedTrainer:
             # the sim clock is observability-only (trace timeline offsets) —
             # restoring it keeps a resumed run's trace contiguous
             "sim_now": float(self._sim_now),
+            **(
+                {
+                    "resilience": {
+                        "supervisor": self.supervisor.state_dict(),
+                        "sim": self.elastic.sim.state_dict(),
+                    }
+                }
+                if self.supervisor is not None else {}
+            ),
         }
 
     def load_state_extras(self, extras: dict) -> None:
@@ -396,3 +618,9 @@ class CodedTrainer:
         self.elastic.load_state_dict(extras["elastic"])
         self.m = self.codec.m
         self._sim_now = float(extras.get("sim_now", 0.0))
+        # resilience state AFTER elastic: the fault sim's identity map must
+        # land on the already-resized worker set
+        res = extras.get("resilience")
+        if res is not None and self.supervisor is not None:
+            self.supervisor.load_state_dict(res["supervisor"])
+            self.elastic.sim.load_state_dict(res["sim"])

@@ -97,7 +97,10 @@ def given(*strategies: _Strategy):
 
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            # @settings may sit above @given (hypothesis allows either order)
+            # — then the attribute lands on the wrapper, not the inner fn
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES))
             # stable per-test seed so failures reproduce across runs
             seed = np.frombuffer(fn.__qualname__.encode(), dtype=np.uint8).sum()
             rng = np.random.default_rng(int(seed))

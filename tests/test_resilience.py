@@ -1,0 +1,582 @@
+"""Failure-domain resilience (DESIGN.md §11) — chaos property harness.
+
+The contract under test:
+
+  (a) a non-finite decoded gradient NEVER touches params or optimizer
+      moments — the step is skipped (or repaired by quarantining the
+      corrupt worker) and reported via ``skipped_nonfinite``;
+  (b) a crashed/hung worker is detected from the arrival stream alone
+      (phi-accrual suspicion), convicted, masked out of the decodable set,
+      and evicted through the elastic path (``Codec.version`` bumps via
+      the membership remap); a recovered hang victim is re-admitted under
+      its original identity;
+  (c) under ANY injected crash/hang/flaky/corrupt schedule leaving at
+      least a decodable healthy subset, training still converges (loss
+      falls, params stay finite) across every registered scheme family;
+  (d) recovery is bit-exact: checkpoint resume from a post-eviction
+      snapshot replays the identical run (fault realizations included);
+  (e) the prefetch worker surfaces failures as the original exception on
+      the training thread — no hangs, no silent stops;
+  (f) a dead serving replica is an erasure: ``ReplicaPool`` answers from
+      the surviving decodable subset while wait-for-all goes to inf.
+
+Tier-2 runs the heavier chaos soak (CHAOS_SOAK=1).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import CodingConfig, TrainConfig
+from repro.core import scheme_names
+from repro.core.simulator import mask_workers
+from repro.core.straggler import NoStragglers, TransientStragglers
+from repro.obs.trace import Tracer
+from repro.resilience import (
+    FaultEvent,
+    FaultSchedule,
+    FaultSupervisor,
+    parse_fault_spec,
+    standard_fault_mix,
+)
+from repro.serve.replicas import ReplicaPool
+from repro.train.prefetch import DevicePrefetcher
+from repro.train.trainer import CodedTrainer, TrainerState
+
+ALL_SCHEMES = sorted(scheme_names())
+_S = {name: (0 if name == "naive" else 1) for name in ALL_SCHEMES}
+
+
+class _ToyModel:
+    d, h = 4, 8
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (self.d, self.h), jnp.float32) * 0.3,
+            "w2": jax.random.normal(k2, (self.h, 1), jnp.float32) * 0.3,
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+def _batch(k, step=0, mb=2, d=4):
+    r = np.random.default_rng(1000 + step)
+    x = r.normal(size=(k, mb, d)).astype(np.float32)
+    return {"x": x, "y": np.tanh(x.sum(-1)).astype(np.float32)}
+
+
+def _mk_trainer(scheme="heter_aware", *, m=4, faults=None, supervisor=None,
+                fault_seed=0, straggler=None, trace=None, rng=3,
+                total_steps=40):
+    return CodedTrainer(
+        _ToyModel(),
+        CodingConfig(scheme=scheme, s=_S[scheme], rebalance_every=3),
+        TrainConfig(lr=1e-2, warmup_steps=2, total_steps=total_steps),
+        m=m, part_mb=2,
+        straggler_model=straggler if straggler is not None else NoStragglers(),
+        true_speeds=np.linspace(1.0, 2.0, m), comm_time=0.01, rng=rng,
+        faults=faults, fault_seed=fault_seed, supervisor=supervisor,
+        trace=trace,
+    )
+
+
+def _params_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _finite(params):
+    return all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# (a) non-finite gradient guard (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_guard_skips_apply_bit_exactly():
+    """A NaN payload in the batch must not touch params/opt: the step is
+    skipped with ``skipped_nonfinite=1`` and the step counter un-bumped;
+    the next clean step proceeds normally."""
+    tr = _mk_trainer()
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state, _ = tr.step(state, _batch(tr.k, 0))  # warm, known-good step
+
+    p_before = jax.tree.map(np.asarray, state.params)
+    mu_before = jax.tree.map(np.asarray, state.opt.mu)
+    step_before = state.step
+    poisoned = _batch(tr.k, 1)
+    poisoned["x"][0, 0, 0] = np.nan
+    state, met = tr.step(state, poisoned)
+    assert met["skipped_nonfinite"] == 1.0
+    assert met["skipped"] == 1.0
+    assert np.isnan(met["loss"]) and np.isnan(met["grad_norm"])
+    assert state.step == step_before
+    assert _params_equal(state.params, p_before)
+    assert _params_equal(state.opt.mu, mu_before)
+
+    state, met = tr.step(state, _batch(tr.k, 2))  # clean step resumes
+    assert met["skipped_nonfinite"] == 0.0
+    assert np.isfinite(met["loss"])
+    assert state.step == step_before + 1
+    assert not _params_equal(state.params, p_before)
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_nonfinite_guard_all_backends(backend):
+    tr = CodedTrainer(
+        _ToyModel(), CodingConfig(scheme="cyclic", s=1),
+        TrainConfig(lr=1e-2, warmup_steps=1, total_steps=10),
+        m=4, part_mb=2, true_speeds=[1.0, 1.0, 1.0, 1.0], rng=0,
+        backend=backend,
+    )
+    state = tr.init_state(jax.random.PRNGKey(0))
+    bad = _batch(tr.k, 0)
+    bad["x"][:] = np.inf
+    p0 = jax.tree.map(np.asarray, state.params)
+    state, met = tr.step(state, bad)
+    assert met["skipped_nonfinite"] == 1.0
+    assert _params_equal(state.params, p0)
+    assert _finite(state.params)
+
+
+# ---------------------------------------------------------------------------
+# (e) prefetch failure propagation (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+class _BoomSource:
+    def __init__(self, k, fail_at=2):
+        self.k = k
+        self.fail_at = fail_at
+
+    def batch(self, step):
+        if step == self.fail_at:
+            raise ValueError("boom")
+        return _batch(self.k, step)
+
+
+def test_prefetch_reraises_original_exception_with_traceback():
+    """A raising batch() on the worker thread surfaces on the consumer as
+    the ORIGINAL exception, traceback pointing at the worker-side raise."""
+    seen = []
+    with pytest.raises(ValueError, match="boom") as ei:
+        for step, _ in DevicePrefetcher(_BoomSource(2, fail_at=2), 0, 10):
+            seen.append(step)
+    assert seen == [0, 1]  # the good prefix is delivered first
+    import traceback
+
+    frames = "".join(traceback.format_tb(ei.value.__traceback__))
+    assert "batch" in frames  # worker-side raise site preserved
+
+
+def test_prefetch_consumer_break_does_not_hang():
+    it = iter(DevicePrefetcher(_BoomSource(2, fail_at=10 ** 9), 0, 10 ** 6))
+    step, _ = next(it)
+    assert step == 0
+    it.close()  # generator close must stop + join the worker, not hang
+
+
+def test_prefetch_empty_range():
+    assert list(DevicePrefetcher(_BoomSource(2), 5, 5)) == []
+
+
+# ---------------------------------------------------------------------------
+# fault-injection layer
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="meteor", worker=0, step=0)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="hang", worker=0, step=0)  # hang must end
+    with pytest.raises(ValueError):
+        FaultEvent(kind="flaky", worker=0, step=0, duration=5, prob=1.5)
+
+
+def test_parse_fault_spec_grammar():
+    sched = parse_fault_spec("crash:3@40, hang:1@20+10, flaky:2@0..100:0.3, corrupt:0@50..60")
+    kinds = sorted(ev.kind for ev in sched.events)
+    assert kinds == ["corrupt", "crash", "flaky", "hang"]
+    hang = next(ev for ev in sched.events if ev.kind == "hang")
+    assert (hang.worker, hang.step, hang.duration) == (1, 20, 10)
+    flaky = next(ev for ev in sched.events if ev.kind == "flaky")
+    assert (flaky.duration, flaky.prob) == (100, 0.3)
+    assert sched.crashed(3, 40) and not sched.crashed(3, 39)
+    for bad in ("crash:1", "hang:1@5", "flaky:1@0:0.5", "nope:1@0"):
+        with pytest.raises(ValueError):
+            parse_fault_spec(bad)
+
+
+def test_mask_workers_is_full_erasure():
+    tr = _mk_trainer()
+    pt = tr.elastic.sim.partition_times(NoStragglers().sample(tr.m, np.random.default_rng(0)))
+    masked = mask_workers(pt, [1])
+    assert np.isinf(masked.finish[1]) and np.all(np.isinf(masked.times[1]))
+    assert np.array_equal(masked.finish[0], pt.finish[0])
+    with pytest.raises(ValueError):
+        mask_workers(pt, [tr.m])
+
+
+def test_fault_sampling_is_stateless_and_membership_independent():
+    """Flaky/corrupt realizations are keyed by (seed, step, ORIGINAL id) —
+    the same step resamples identically, the backbone of bit-exact
+    resume."""
+    sched = FaultSchedule([FaultEvent(kind="flaky", worker=2, step=0,
+                                      duration=100, prob=0.5)])
+    tr = _mk_trainer(faults=sched)
+    sim = tr.elastic.sim
+    prof = NoStragglers().sample(tr.m, np.random.default_rng(0))
+    sim.begin_step(7)
+    f1 = sim.partition_times(prof).finish.copy()
+    sim.begin_step(7)
+    f2 = sim.partition_times(prof).finish.copy()
+    np.testing.assert_array_equal(f1, f2)
+
+
+# ---------------------------------------------------------------------------
+# (b) suspicion -> conviction -> eviction -> re-admission
+# ---------------------------------------------------------------------------
+
+
+def test_crash_is_convicted_and_evicted_via_elastic_path():
+    sched = FaultSchedule([FaultEvent(kind="crash", worker=3, step=4)])
+    tr = _mk_trainer(faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    v0 = tr.codec.version
+    for step in range(20):
+        state, met = tr.step(state, _batch(tr.k, state.step))
+    sup = tr.supervisor
+    assert tr.m == 3  # crashed worker evicted
+    assert tr.codec.version > v0  # through the membership remap
+    assert [c["worker"] for c in sup.convictions] == [3]
+    assert sup.convictions[0]["reason"] == "timeout"
+    assert len(sup.evictions) == 1 and sup.evictions[0]["worker"] == 3
+    assert sup.health[3].status == "evicted"
+    # detection was prompt: convicted within a handful of steps of onset
+    assert sup.convictions[0]["step"] <= 4 + 8
+    assert _finite(state.params)
+    assert np.isfinite(met["loss"])
+
+
+def test_hang_recovers_and_is_readmitted_under_original_identity():
+    sched = FaultSchedule([FaultEvent(kind="hang", worker=1, step=4, duration=5)])
+    tr = _mk_trainer(faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    m_seen = []
+    for step in range(24):
+        state, _ = tr.step(state, _batch(tr.k, state.step))
+        m_seen.append(tr.m)
+    sup = tr.supervisor
+    assert min(m_seen) == 3  # evicted during the hang
+    assert tr.m == 4  # ... and back after recovery
+    assert len(sup.readmissions) == 1 and sup.readmissions[0]["worker"] == 1
+    assert sup.health[1].status == "healthy"
+    assert 1 in tr.elastic.sim.orig_of_cur  # original identity restored
+    assert _finite(state.params)
+
+
+def test_flaky_uploads_retry_without_conviction():
+    sched = FaultSchedule([FaultEvent(kind="flaky", worker=2, step=0,
+                                      duration=30, prob=0.4)])
+    tr = _mk_trainer(faults=sched, fault_seed=5)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    for step in range(24):
+        state, _ = tr.step(state, _batch(tr.k, state.step))
+    sup = tr.supervisor
+    assert not sup.convictions  # flaky-but-recovering never convicts
+    assert tr.m == 4
+    assert sup.health.get(2) is not None and sup.health[2].retries > 0
+    assert _finite(state.params)
+
+
+def test_corruption_is_quarantined_repaired_then_convicted():
+    sched = FaultSchedule([FaultEvent(kind="corrupt", worker=0, step=5, duration=6)])
+    tr = _mk_trainer(faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    mets = []
+    for step in range(24):
+        state, met = tr.step(state, _batch(tr.k, state.step))
+        mets.append(met)
+    sup = tr.supervisor
+    assert sup.nonfinite_steps > 0
+    assert sup.repaired_steps > 0  # quarantine-and-repair salvaged steps
+    assert sum(m.get("repaired", 0.0) for m in mets) > 0
+    assert any(c["reason"] == "corrupt" and c["worker"] == 0
+               for c in sup.convictions)
+    assert tr.m == 3
+    assert _finite(state.params)
+    # zero non-finite updates ever reached the params
+    assert all(np.isfinite(m["loss"]) or m["skipped"] for m in mets)
+
+
+def test_masking_degrades_gracefully_when_eviction_infeasible():
+    """m = s+1: eviction would leave m <= s, so the convicted worker stays
+    masked (erasure) and exact-mode steps skip — degraded, not crashed."""
+    sched = FaultSchedule([FaultEvent(kind="crash", worker=1, step=2)])
+    tr = _mk_trainer(scheme="cyclic", m=2, faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    for step in range(12):
+        state, met = tr.step(state, _batch(tr.k, state.step))
+    sup = tr.supervisor
+    assert tr.m == 2  # no eviction possible
+    assert sup.convictions and not sup.evictions
+    assert sup.masked_origs() == {1}
+    assert _finite(state.params)
+
+
+def test_supervisor_requires_faulty_sim():
+    tr = _mk_trainer()  # no faults -> plain ClusterSim
+    with pytest.raises(TypeError):
+        FaultSupervisor().bind(tr.elastic)
+
+
+# ---------------------------------------------------------------------------
+# (c) chaos harness: random schedules x all scheme families
+# ---------------------------------------------------------------------------
+
+
+def _chaos_schedule(rng, m, s, steps):
+    """One random schedule with at most ``max(s, 1)`` PERMANENT dark
+    workers (crash/hang may exceed tolerance transiently; the supervisor's
+    evictions restore decodability)."""
+    draw = lambda lo, hi: int(rng.integers(lo, hi + 1))
+    events = []
+    kinds = ["crash", "hang", "flaky", "corrupt"]
+    n_events = draw(1, 3)
+    permanent_budget = max(s, 1)
+    used_workers: set[int] = set()
+    for _ in range(n_events):
+        kind = kinds[draw(0, 3)]
+        w = draw(0, m - 1)
+        if w in used_workers:
+            continue
+        t = draw(2, max(steps // 2, 3))
+        if kind == "crash":
+            if permanent_budget <= 0:
+                continue
+            permanent_budget -= 1
+            events.append(FaultEvent(kind="crash", worker=w, step=t))
+        elif kind == "hang":
+            if permanent_budget <= 0:
+                continue
+            permanent_budget -= 1  # dark until evicted: budget it like a crash
+            events.append(FaultEvent(kind="hang", worker=w, step=t,
+                                     duration=draw(3, 8)))
+        elif kind == "flaky":
+            events.append(FaultEvent(kind="flaky", worker=w, step=t,
+                                     duration=draw(5, steps),
+                                     prob=draw(1, 5) / 10.0))
+        else:
+            events.append(FaultEvent(kind="corrupt", worker=w, step=t,
+                                     duration=draw(2, 6),
+                                     prob=draw(5, 10) / 10.0))
+        used_workers.add(w)
+    return FaultSchedule(events)
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_chaos_training_stays_finite_and_converges(scheme, chaos_seed):
+    """Any random crash/hang/flaky/corrupt schedule leaving a decodable
+    healthy subset: loss falls, params stay finite, every eviction went
+    through the elastic path (version bumps)."""
+    rng = np.random.default_rng(chaos_seed)
+    m, steps = 6, 26
+    if scheme == "fractional_repetition":
+        m = 6  # (s+1) | m
+    sched = _chaos_schedule(rng, m, _S[scheme], steps)
+    tr = _mk_trainer(scheme, m=m, faults=sched,
+                     fault_seed=chaos_seed,
+                     straggler=TransientStragglers(p=0.2), total_steps=steps)
+    state = tr.init_state(jax.random.PRNGKey(1))
+    losses = []
+    v0 = tr.codec.version
+    for _ in range(steps):
+        try:
+            state, met = tr.step(state, _batch(tr.k, state.step))
+        except ValueError:
+            # a fault eviction at the top of step() resized k on a
+            # structural scheme — rebuild the batch and retry (the
+            # documented churn contract)
+            state, met = tr.step(state, _batch(tr.k, state.step))
+        if not met["skipped"]:
+            losses.append(met["loss"])
+        assert _finite(state.params), f"non-finite params under {sched.events}"
+    assert losses, f"no step ever applied under {sched.events}"
+    assert np.isfinite(losses).all()
+    # convergence: the tail improves on the first applied step's loss
+    assert min(losses[-5:]) < losses[0] or losses[0] < 1e-3
+    if tr.supervisor.evictions:
+        assert tr.codec.version > v0
+    assert tr.m > tr.codec.s
+
+
+# ---------------------------------------------------------------------------
+# (d) bit-exact recovery from a post-eviction snapshot
+# ---------------------------------------------------------------------------
+
+
+def _run_steps(tr, state, n):
+    for _ in range(n):
+        state, met = tr.step(state, _batch(tr.k, state.step))
+    return state, met
+
+
+def test_resume_across_eviction_is_bit_exact():
+    """Snapshot AFTER a fault-driven eviction; a fresh trainer restoring it
+    (supervisor + fault-sim identity map included) replays the remaining
+    steps bit-for-bit — fault realizations are resampled identically."""
+    sched = FaultSchedule([
+        FaultEvent(kind="crash", worker=3, step=3),
+        FaultEvent(kind="flaky", worker=1, step=0, duration=100, prob=0.3),
+    ])
+    mk = lambda: _mk_trainer(faults=sched, fault_seed=11)
+    tr_a = mk()
+    state = tr_a.init_state(jax.random.PRNGKey(0))
+    state, _ = _run_steps(tr_a, state, 14)
+    assert tr_a.m == 3  # the eviction happened before the snapshot
+    snap_state = TrainerState(
+        jax.tree.map(np.asarray, state.params),
+        jax.tree.map(lambda x: np.asarray(x) if hasattr(x, "shape") else x, state.opt),
+        state.step,
+    )
+    extras = tr_a.state_extras()
+
+    tr_b = mk()
+    _ = tr_b.init_state(jax.random.PRNGKey(0))  # fresh (discarded) init
+    tr_b.load_state_extras(extras)
+    assert tr_b.m == 3
+    state_b = TrainerState(snap_state.params, snap_state.opt, snap_state.step)
+
+    state_a, met_a = _run_steps(tr_a, state, 8)
+    state_b, met_b = _run_steps(tr_b, state_b, 8)
+    assert _params_equal(state_a.params, state_b.params)
+    assert met_a["loss"] == met_b["loss"]
+    assert tr_a.m == tr_b.m
+    assert tr_a.supervisor.state_dict() == tr_b.supervisor.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# (f) serving: replica death -> answer from the surviving decodable subset
+# ---------------------------------------------------------------------------
+
+
+def test_replica_pool_answers_from_surviving_subset():
+    pool = ReplicaPool([1.0, 1.5, 2.0, 2.5], scheme="heter_aware", s=1, seed=0)
+    alive = pool.prefill(128, np.random.default_rng(1))
+    assert alive.exact and np.isfinite(alive.t_all)
+
+    pool.mark_dead([2])
+    out = pool.prefill(128, np.random.default_rng(1))
+    assert out.exact  # <= s dead: still an exact decode
+    assert np.isfinite(out.t_first)
+    assert np.isinf(out.t_all)  # wait-for-all replication would never answer
+    assert pool.dead == frozenset({2})
+
+    pool.revive()
+    back = pool.prefill(128, np.random.default_rng(1))
+    assert np.isfinite(back.t_all)
+    with pytest.raises(ValueError):
+        pool.mark_dead([99])
+
+
+def test_replica_pool_beyond_tolerance_is_best_effort():
+    pool = ReplicaPool([1.0, 1.5, 2.0, 2.5], scheme="heter_aware", s=1, seed=0)
+    pool.mark_dead([1, 2])  # > s dead
+    out = pool.prefill(128, np.random.default_rng(2))
+    assert np.isfinite(out.t_first)  # still answers (SLO best-effort)
+    assert not out.exact or out.n_used <= 2
+
+
+# ---------------------------------------------------------------------------
+# fault ledger -> obs_report round trip
+# ---------------------------------------------------------------------------
+
+
+def test_fault_ledger_round_trips_through_jsonl(tmp_path):
+    from repro.launch.obs_report import fault_section, load_records
+
+    sched = FaultSchedule([
+        FaultEvent(kind="crash", worker=3, step=4),
+        FaultEvent(kind="corrupt", worker=0, step=2, duration=3),
+    ])
+    tracer = Tracer()
+    tr = _mk_trainer(faults=sched, trace=tracer)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state, _ = _run_steps(tr, state, 16)
+    live = tr.forensics.fault_report()
+    assert live["convictions"]
+    assert live["suspicion"]
+
+    path = tmp_path / "run.jsonl"
+    tracer.write_jsonl(str(path))
+    rebuilt = fault_section(load_records(str(path)))
+    assert rebuilt["convictions"] == live["convictions"]
+    assert rebuilt["evictions"] == live["evictions"]
+    assert set(rebuilt["suspicion"]) == set(live["suspicion"])
+    assert rebuilt["nonfinite_steps"] == live["nonfinite_steps"]
+    assert {f["kind"] for f in rebuilt["faults"]} == {f["kind"] for f in live["faults"]}
+
+
+# ---------------------------------------------------------------------------
+# tier-2 chaos soak (CHAOS_SOAK=1): heavier schedules, more examples
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(
+    os.environ.get("CHAOS_SOAK", "0") != "1",
+    reason="tier-2 soak (set CHAOS_SOAK=1; wired into scripts/test.sh)",
+)
+@pytest.mark.parametrize("scheme", ["heter_aware", "group_based", "bernoulli"])
+def test_chaos_soak(scheme):
+    """Long mixed-fault runs at m=10: crash + hang + flaky + corrupt all
+    live in one schedule; training must stay finite, evict the permanent
+    failures, re-admit the hang victim, and keep converging."""
+    rng = np.random.default_rng(17)
+    for trial in range(4):
+        m, steps = 10, 60
+        events = [
+            FaultEvent(kind="crash", worker=int(rng.integers(0, m)), step=int(rng.integers(3, 12))),
+            FaultEvent(kind="hang", worker=(int(rng.integers(0, m - 1)) + 1) % m,
+                       step=int(rng.integers(20, 30)), duration=int(rng.integers(4, 9))),
+            FaultEvent(kind="flaky", worker=int(rng.integers(0, m)), step=0,
+                       duration=steps, prob=0.3),
+            FaultEvent(kind="corrupt", worker=int(rng.integers(0, m)),
+                       step=int(rng.integers(35, 45)), duration=4),
+        ]
+        # distinct workers for the permanent faults
+        if events[0].worker == events[1].worker:
+            continue
+        tr = _mk_trainer(scheme, m=m, faults=FaultSchedule(events),
+                         fault_seed=trial, straggler=TransientStragglers(p=0.2),
+                         total_steps=steps)
+        state = tr.init_state(jax.random.PRNGKey(trial))
+        losses = []
+        for _ in range(steps):
+            try:
+                state, met = tr.step(state, _batch(tr.k, state.step))
+            except ValueError:  # eviction resized k: rebuild batch, retry
+                state, met = tr.step(state, _batch(tr.k, state.step))
+            assert _finite(state.params)
+            if not met["skipped"]:
+                losses.append(met["loss"])
+        assert losses and np.isfinite(losses).all()
+        assert min(losses[-10:]) < losses[0]
+        assert tr.supervisor.convictions  # the crash was caught
+        assert tr.m > tr.codec.s

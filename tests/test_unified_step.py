@@ -79,6 +79,7 @@ def _oracle_exact_step(tr, state, batch):
             "decode_residual": outcome.residual, "exact": 0.0,
             "exact_fraction": tr._exact_fraction(),
             "membership_epoch": 0.0,  # churn-free run (elastic m is PR-5)
+            "skipped_nonfinite": 0.0,
         }
     tr._exact_steps += 1
     new_state, metrics = tr.engine.step(state, batch, outcome.a)
@@ -92,6 +93,7 @@ def _oracle_exact_step(tr, state, batch):
         "decode_residual": 0.0, "exact": 1.0,
         "exact_fraction": tr._exact_fraction(),
         "membership_epoch": 0.0,  # churn-free run (elastic m is PR-5)
+        "skipped_nonfinite": 0.0,
     }
     if tr.elastic.maybe_rebalance(new_state.step, every=tr.coding.rebalance_every):
         out["rebalanced"] = 1.0
