@@ -2,7 +2,7 @@
 # driver runs); PYTHONPATH plumbing lives in scripts/test.sh so it stops
 # being tribal knowledge.
 
-.PHONY: test test-fast test-tier2 test-membership churn-soak chaos-soak bench bench-smoke bench-scaling bench-serving bench-obs bench-resilience quickstart
+.PHONY: test test-fast test-tier2 test-membership churn-soak chaos-soak bench bench-smoke bench-scaling bench-serving bench-obs bench-resilience bench-kernels quickstart
 
 test:
 	./scripts/test.sh
@@ -40,5 +40,12 @@ bench-obs:  ## observability overhead gate: tracing-on <= 1.05x tracing-off fuse
 bench-resilience:  ## resilience gate: degraded time-to-target <= 1.5x fault-free under 1 crash + 1 hang
 	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/resilience.py
 
+bench-kernels:  ## kernel roofline gate: fused coded_reduce >= 1.0x axpy, pad-free trace, no f32 wire tensor, oracle bit-equality
+	PYTHONPATH=src:. BENCH_FAST=1 python benchmarks/kernels_bench.py
+
 quickstart:
 	PYTHONPATH=src python examples/quickstart.py
+
+# On a real TPU host, launch through scripts/run.sh for the hardened
+# environment (tcmalloc, XLA step markers, quiet TF logging), e.g.:
+#   ./scripts/run.sh python -m repro.launch.train --arch smollm-360m --reduced

@@ -124,12 +124,13 @@ def main() -> None:
     summary.append(("observability", (time.time() - t) * 1e6 / max(len(rows), 1),
                     ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
-    # --- kernels ---
+    # --- kernels: wire-path roofline + structural claims (DESIGN.md §12) ---
     t = time.time()
     rows = kernels_bench.run()
+    claims = kernels_bench.derived_claims(rows)
     all_rows += rows
-    for r in rows:
-        summary.append((r["name"], r["us_per_call"], r["derived"], {}))
+    summary.append(("kernels", (time.time() - t) * 1e6 / max(len(rows), 1),
+                    ";".join(f"{k}={v:.2f}" for k, v in claims.items()), claims))
 
     # --- roofline table from dry-run artifacts ---
     rows = roofline_table.run()

@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Hardened launcher for real (TPU-)host runs: sets the environment every
+# long training job wants before python even starts, then execs the given
+# command.  Usage:
+#
+#   ./scripts/run.sh python -m repro.launch.train --arch smollm-360m --reduced
+#   CPU_DEVICES=8 ./scripts/run.sh python tests/spmd_driver.py engine_spmd
+#
+# Everything is overridable: any variable already exported by the caller
+# wins.  The launcher only fills gaps, so it is safe as the default entry
+# point in cron/CI and on interactive TPU VMs alike.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# --- allocator: tcmalloc beats glibc malloc for the host-side pack path's
+# large short-lived buffers; preload only if the host actually has it
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -z "${LD_PRELOAD:-}" && -e "$TCMALLOC" ]]; then
+  export LD_PRELOAD="$TCMALLOC"
+fi
+# large allocs are normal here (gradient stacks, coded batches): silence
+# tcmalloc's per-allocation report spam above this many bytes
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# --- logging: TF's C++ backend (libtpu, tsl) floods stderr at INFO;
+# 4 = errors only.  JAX's own logging is unaffected.
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# --- XLA flags (appended to whatever the caller set):
+#   --xla_step_marker_location=1: mark the outer while loop as the step
+#     boundary so TPU profiles cut traces at training-step granularity.
+#     TPU-only flag — CPU/GPU jaxlib aborts on unknown XLA flags, so only
+#     add it when the host actually looks like a TPU VM.
+#   CPU_DEVICES=n: fake host devices for mesh tests on machines without
+#     accelerators (tests/spmd_driver.py sets its own; this is for ad-hoc)
+XF="${XLA_FLAGS:-}"
+if [[ -e /dev/accel0 || -n "${TPU_NAME:-}" || -n "${TPU_WORKER_ID:-}" ]]; then
+  case "$XF" in *xla_step_marker_location*) ;; *) XF="$XF --xla_step_marker_location=1";; esac
+fi
+if [[ -n "${CPU_DEVICES:-}" ]]; then
+  case "$XF" in *xla_force_host_platform_device_count*) ;;
+    *) XF="$XF --xla_force_host_platform_device_count=${CPU_DEVICES}";; esac
+fi
+export XLA_FLAGS="${XF# }"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec "$@"

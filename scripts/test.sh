@@ -21,4 +21,6 @@ if [[ "${RUN_TIER2:-0}" == "1" ]]; then
   make chaos-soak
   echo "== tier-2: resilience gate (BENCH_FAST=1 benchmarks/resilience.py) =="
   make bench-resilience
+  echo "== tier-2: kernel roofline gate (BENCH_FAST=1 benchmarks/kernels_bench.py) =="
+  make bench-kernels
 fi

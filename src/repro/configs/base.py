@@ -143,6 +143,10 @@ class CodingConfig:
     rebalance_every: int = 50  # steps between c_i re-estimation checks
     deadline_factor: float = 3.0  # straggler if step_time > factor * median
     compress: bool = False  # int8 wire compression (faithful path)
+    # fused Pallas wire kernels for the compress path: None = decide on the
+    # measuring host (on only where the fused encode beat the unfused
+    # composition — repro.kernels.autotune.wire_kernel_default)
+    wire_kernel: bool | None = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,7 +55,9 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.coding import CodingScheme
 from repro.core.decoding import Decoder
+from repro.kernels import ref as kref
 from repro.kernels.coded_reduce import coded_reduce_pallas
+from repro.kernels.wire import coded_decode_int8_pallas, coded_encode_int8_pallas
 
 __all__ = [
     "CodedPlan",
@@ -327,14 +329,10 @@ def fused_coded_value_and_grad(loss_fn: LossFn) -> Callable[[PyTree, PyTree, jnp
 # ---------------------------------------------------------------------------
 
 
-def _quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
+# wire-format definition lives with the kernel oracles; these aliases keep
+# the historical names used throughout this module and its tests
+_quantize_int8 = kref.quantize_int8
+_dequantize = kref.dequantize
 
 
 def faithful_spmd_step(
@@ -343,6 +341,7 @@ def faithful_spmd_step(
     coding_axes: tuple[str, ...] = ("data",),
     compress: bool = False,
     interpret: bool | None = None,
+    wire_kernel: bool | None = None,
 ) -> Callable:
     """Paper protocol under shard_map: flat Pallas encode, one-psum decode.
 
@@ -362,11 +361,25 @@ def faithful_spmd_step(
     buffer instead of a per-leaf tree walk.  Callers unravel the result once
     with the params structure's ``ravel_pytree`` inverse.
 
+    ``wire_kernel`` (``compress`` only) switches the quantize stage to the
+    fused Pallas wire kernels (DESIGN.md §12): encode+quantize+error-feedback
+    in ONE kernel — the fp32 wire tensor never materializes in HBM — and the
+    decode consumes the int8 wire directly: ``all_gather`` of the (D,) int8
+    payloads (4× fewer collective bytes than an fp32 psum) plus the gathered
+    per-worker ``a_w·scale_w`` weights, reduced locally by the tiled int8
+    kernel.  Replicated-decode semantics are identical to the psum up to
+    f32 reduction order.  None → :func:`repro.kernels.autotune.
+    wire_kernel_default` (True only where the fused kernel measured faster).
+
     Manual only over ``coding_axes`` — the 'model' axis stays auto so TP
     sharding inside loss_fn is still handled by GSPMD.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if wire_kernel is None:
+        from repro.kernels.autotune import wire_kernel_default
+
+        wire_kernel = compress and wire_kernel_default()
 
     def worker_fn(params, slot_batch, coeff, a, err):
         # block shapes: slot_batch (1, n_max, mb, ...), coeff (1, n_max),
@@ -379,6 +392,16 @@ def faithful_spmd_step(
             return carry, ravel_pytree(g)[0].astype(jnp.float32)
 
         _, gstack = jax.lax.scan(slot_grad, None, sb)  # (n_max, D)
+        if compress and wire_kernel:
+            # fused wire path: one kernel encodes straight to the int8 wire
+            q, scale, new_err = coded_encode_int8_pallas(
+                gstack, cw, err[0], interpret=interpret
+            )
+            new_err = new_err[None]
+            q_all = jax.lax.all_gather(q, coding_axes, tiled=False)  # (W, D) i8
+            ws_all = jax.lax.all_gather(scale * a[0], coding_axes)  # (W,)
+            decoded = coded_decode_int8_pallas(q_all, ws_all, interpret=interpret)
+            return decoded, new_err
         coded = coded_reduce_pallas(gstack, cw, interpret=interpret)  # (D,)
         if compress:
             # wire-format emulation: the flat g̃_w is what travels, so the

@@ -119,6 +119,24 @@ def flash_attention_pallas(
         block_q=block_q, block_k=block_k, n_kv_blocks=n_k,
         causal=causal, window=window, scale=scale,
     )
+    hints = {}
+    if not interpret:
+        from jax.experimental.pallas import tpu as pltpu
+
+        hints = {
+            # head and q-block axes are independent; the kv axis carries the
+            # online-softmax running state (m/l/acc scratch)
+            "compiler_params": pltpu.TPUCompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            "cost_estimate": pl.CostEstimate(
+                # 2 matmuls of (S, hd)x(hd, S) per head + the rescale traffic
+                flops=4 * B * H * S * S * hd,
+                bytes_accessed=(q.size + k.size + v.size) * q.dtype.itemsize
+                + q.size * q.dtype.itemsize,
+                transcendentals=B * H * S * S,  # exp in the online softmax
+            ),
+        }
     out = pl.pallas_call(
         kernel,
         grid=(B * H, n_q, n_k),
@@ -134,6 +152,7 @@ def flash_attention_pallas(
             _vmem_scratch(block_q, 1),
             _vmem_scratch(block_q, hd),
         ],
+        **hints,
         interpret=interpret,
     )(qh, kh, vh)
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

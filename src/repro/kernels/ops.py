@@ -7,7 +7,12 @@
                          TPU kernels do not lower to the CPU backend)
   - "auto":              "pallas" on TPU, "pallas_interpret" elsewhere — the
                          same backend probe the device-resident spmd wire
-                         path uses (coded_reduce only)
+                         path uses (coded_reduce + int8 wire ops)
+  - "best":              measured-fastest on THIS host (coded_reduce only):
+                         the autotuned-``tile_d`` Pallas kernel on TPU, the
+                         autotuned XLA schedule elsewhere (a CPU host cannot
+                         compile Pallas, so "best" must never mean
+                         interpret-mode wall clock) — see ``autotune.py``
 """
 
 from __future__ import annotations
@@ -15,18 +20,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.coded_reduce import coded_reduce_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.wire import coded_decode_int8_pallas, coded_encode_int8_pallas
 
 
 def coded_reduce(g: jnp.ndarray, w: jnp.ndarray, impl: str = "pallas") -> jnp.ndarray:
     if impl == "xla":
         return ref.coded_reduce_ref(g, w)
+    if impl == "best":
+        if jax.default_backend() == "tpu":
+            return coded_reduce_pallas(g, w, tile_d=autotune.best_tile_d(*g.shape))
+        return autotune.xla_reduce(g, w)
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
     return coded_reduce_pallas(g, w, interpret=(impl == "pallas_interpret"))
+
+
+def coded_encode_int8(
+    g: jnp.ndarray, w: jnp.ndarray, err: jnp.ndarray, impl: str = "auto"
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused wire-format encode: ``(q int8, scale, new_err)`` in one pass."""
+    if impl == "xla":
+        return ref.encode_int8_ref(g, w, err)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    return coded_encode_int8_pallas(g, w, err, interpret=(impl == "pallas_interpret"))
+
+
+def coded_decode_int8(
+    q: jnp.ndarray, ws: jnp.ndarray, impl: str = "auto"
+) -> jnp.ndarray:
+    """Decode straight off stacked int8 wire payloads under a_w·scale_w."""
+    if impl == "xla":
+        return ref.coded_reduce_ref(q.astype(jnp.float32), ws)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    return coded_decode_int8_pallas(q, ws, interpret=(impl == "pallas_interpret"))
 
 
 def flash_attention(

@@ -12,6 +12,74 @@ def coded_reduce_ref(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("p,pd->d", w.astype(jnp.float32), g.astype(jnp.float32)).astype(g.dtype)
 
 
+def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization with a global scale — the wire format's
+    host-side definition (and the bit-level oracle for the fused encode
+    kernel in ``wire.py``).  Returns ``(q int8, scale f32)``.
+
+    ``scale`` is max|g| MULTIPLIED by the f32 constant 1/127 — the wire
+    format's definition (see ``wire.INV_127``): XLA compiles division by a
+    literal constant as a reciprocal multiply that is not IEEE division, so
+    only the explicit multiply is bit-reproducible across toolchains."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) * jnp.float32(1.0 / 127.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def encode_int8_ref(
+    g: jnp.ndarray, w: jnp.ndarray, err: jnp.ndarray, *, reduce_fn=None
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unfused wire-format composition: reduce → +err → quantize → residual.
+
+    The fp32 ``coded`` tensor this materializes between stages is exactly
+    what the fused kernel keeps out of HBM — ``memory_analysis`` comparisons
+    and allclose checks use this jnp form.  For BIT-level comparison use
+    :func:`encode_int8_oracle_np`: a jitted jnp composition leaves the
+    mul→add rounding at two boundaries to XLA/LLVM FMA contraction, which
+    is shape-dependent and not reproducible across toolchains.
+    """
+    reduce_fn = coded_reduce_ref if reduce_fn is None else reduce_fn
+    coded = reduce_fn(g, w).astype(jnp.float32) + err
+    q, scale = quantize_int8(coded)
+    return q, scale, coded - dequantize(q, scale)
+
+
+def encode_int8_oracle_np(g, w, err, *, reduce_fn):
+    """Bit-level oracle for the fused encode kernel (DESIGN.md §12 contract).
+
+    Strict per-operation IEEE f32 numpy arithmetic — no compiler, so no
+    fusion discretion — except ``new_err``, which is the CORRECTLY-ROUNDED
+    exact residual: ``q·scale`` (8-bit int × 24-bit float) and ``coded``
+    are both exactly representable in f64 and their difference (bounded by
+    ``scale/2`` with matching exponents) is f64-exact, so one final cast
+    rounds once — the same single rounding the kernel's fused
+    multiply-subtract performs.  ``reduce_fn`` must be the kernel's own
+    reduce (``coded_reduce_pallas`` with ``out_dtype=f32``, interpret mode)
+    so the accumulation order matches bit-for-bit; the ``+ err`` boundary
+    rounds twice on both sides (the kernel's mul feeds a loop-carried
+    scratch accumulator, which blocks FMA contraction there).
+    """
+    import numpy as np
+
+    red = np.asarray(reduce_fn(g, w), np.float32)
+    coded = (red + np.asarray(err, np.float32)).astype(np.float32)
+    mx = np.maximum(np.max(np.abs(coded)), np.float32(1e-12)).astype(np.float32)
+    # the format's scale is an IEEE f32 multiply by the constant 1/127
+    # (division by a literal is XLA-rewritten to a non-IEEE reciprocal
+    # multiply and cannot be mirrored here); coded/scale has a runtime
+    # divisor, which XLA lowers as true IEEE division
+    scale = (mx * np.float32(1.0 / 127.0)).astype(np.float32)
+    q = np.clip(np.round((coded / scale).astype(np.float32)), -127, 127).astype(np.int8)
+    new_err = (
+        coded.astype(np.float64) - q.astype(np.float64) * np.float64(scale)
+    ).astype(np.float32)
+    return q, scale, new_err
+
+
 def attention_ref(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     *, causal: bool = True, window: int | None = None,

@@ -103,6 +103,15 @@ def main(argv=None):
                          "(suspicion-driven eviction + re-admission)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="RNG key for flaky/corrupt fault realizations")
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 wire compression with error feedback on the "
+                         "coded gradient (spmd wire format emulated on the "
+                         "other backends)")
+    ap.add_argument("--wire-kernel", default="auto", choices=["auto", "on", "off"],
+                    help="fused Pallas int8 wire kernels for --compress: "
+                         "auto = on only where the fused encode measured "
+                         "faster than the unfused composition on this host "
+                         "(DESIGN.md §12)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -114,7 +123,10 @@ def main(argv=None):
         if args.speeds
         else np.linspace(1.0, 2.0, args.m)
     )
-    coding = CodingConfig(scheme=args.scheme, s=args.s)
+    coding = CodingConfig(
+        scheme=args.scheme, s=args.s, compress=args.compress,
+        wire_kernel={"auto": None, "on": True, "off": False}[args.wire_kernel],
+    )
     tc = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps, seed=args.seed)
     policy = None
     if args.deadline_mode != "none":

@@ -97,6 +97,7 @@ class StepEngine:
         coding_axes: tuple[str, ...] = ("data",),
         compress: bool = False,
         host_pack: bool = False,
+        wire_kernel: bool | None = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
@@ -110,6 +111,13 @@ class StepEngine:
         self.coding_axes = coding_axes
         self.compress = compress
         self.host_pack = host_pack
+        # fused int8 wire kernels (DESIGN.md §12): None defers to the host
+        # probe — on only where the fused encode measured faster (TPU)
+        if wire_kernel is None:
+            from repro.kernels.autotune import wire_kernel_default
+
+            wire_kernel = compress and wire_kernel_default()
+        self.wire_kernel = bool(wire_kernel) and compress
         # observability seam (DESIGN.md §10): the trainer installs its
         # tracer here; standalone engines keep the zero-cost NULL singleton
         self.tracer = NULL_TRACER
@@ -143,7 +151,10 @@ class StepEngine:
             self._ref_grad = jax.jit(jax.grad(self._slot_loss))
         if backend == "spmd":
             self._spmd_grads = jax.jit(
-                faithful_spmd_step(self._slot_loss, mesh, coding_axes, compress=compress)
+                faithful_spmd_step(
+                    self._slot_loss, mesh, coding_axes, compress=compress,
+                    wire_kernel=self.wire_kernel,
+                )
             )
             self._pack_slots = jax.jit(
                 lambda pbatch, idx: pack_coded_batch(pbatch, self.codec.plan, idx=idx)
@@ -326,6 +337,13 @@ class StepEngine:
     # -- gradients (backend seam, used directly by the equivalence tests) ---
 
     def _spmd_gradients(self, params: PyTree, partition_batch: dict, a, support) -> PyTree:
+        # per-kernel spans (DESIGN.md §10/§12): the spmd backend's step span
+        # splits into pack / the shard_map program (tagged with which wire
+        # kernels ran inside it) / unravel, so obs_report's phase table shows
+        # the encode+decode cost move when the fused wire path switches on
+        tr = self.tracer
+        traced = tr.enabled
+        t0 = tr.clock() if traced else 0.0
         plan = self.codec.plan
         pids, _, mask = self._device_plan()
         pbatch = jax.tree.map(jnp.asarray, partition_batch)
@@ -349,8 +367,24 @@ class StepEngine:
             width = int(flat0.size) if self.compress else 1
             self._err = jnp.zeros((self.codec.m, width), jnp.float32)
             self._err_version = self.codec.version
+        if traced:
+            t1 = tr.clock()
+            tr.span_at("phase.spmd.pack", t0, t1, clock="wall", where="host")
         flat, self._err = self._spmd_grads(params, sb, coeff, a_dev, self._err)
-        return self._unravel(flat)
+        if traced:
+            jax.block_until_ready(flat)
+            t2 = tr.clock()
+            kernels = (
+                "coded_encode_int8+all_gather(i8)+coded_decode_int8"
+                if self.wire_kernel
+                else "coded_reduce+psum(f32)"
+                + ("+quantize_int8" if self.compress else "")
+            )
+            tr.span_at("phase.spmd.grads", t1, t2, clock="wall", kernels=kernels)
+        out = self._unravel(flat)
+        if traced:
+            tr.span_at("phase.spmd.unravel", t2, tr.clock(), clock="wall")
+        return out
 
     def gradients(self, params: PyTree, partition_batch: dict, a) -> PyTree:
         """Decoded gradient under decode vector ``a`` (ndarray, or a

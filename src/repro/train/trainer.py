@@ -101,7 +101,7 @@ class CodedTrainer:
         self.engine = StepEngine(
             model, train, self.codec, backend=backend, mesh=mesh,
             coding_axes=coding.coding_axes if mesh is not None else ("data",),
-            compress=coding.compress,
+            compress=coding.compress, wire_kernel=coding.wire_kernel,
         )
         # resilience (DESIGN.md §11): a fault schedule makes the controller's
         # sim a FaultyClusterSim; a supervisor closes the detect/evict loop.

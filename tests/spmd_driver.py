@@ -199,6 +199,82 @@ def check_engine_spmd_inexact():
     print("engine spmd inexact ok")
 
 
+def check_engine_spmd_wire():
+    """Fused int8 wire kernels on the spmd backend (DESIGN.md §12): with
+    compression on, wire_kernel=True (fused Pallas encode + int8 all_gather
+    decode) and wire_kernel=False (coded_reduce + XLA quantize + f32 psum)
+    must produce the same gradients — on an exact decode AND an inexact
+    partial-work outcome — and both must stay within the compression
+    tolerance of the uncompressed reference oracle."""
+    import jax.numpy as jnp
+    from repro.configs.base import TrainConfig
+    from repro.core import Codec, get_scheme
+    from repro.train.engine import StepEngine
+
+    class Toy:
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            return {
+                "w1": jax.random.normal(k1, (4, 16), jnp.float32),
+                "w2": jax.random.normal(k2, (16, 1), jnp.float32),
+            }
+
+        def weighted_loss(self, params, batch):
+            pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+            return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
+    model = Toy()
+    r = np.random.default_rng(0)
+    pb = {
+        "x": r.normal(size=(8, 2, 4)).astype(np.float32),
+        "y": r.normal(size=(8, 2)).astype(np.float32),
+    }
+    tc = TrainConfig()
+
+    def engines(scheme_name):
+        codec = Codec(get_scheme(scheme_name, m=4, k=8, s=1, c=[1, 2, 3, 2], rng=0))
+        mk = lambda **kw: StepEngine(model, tc, codec, backend="spmd", mesh=mesh,
+                                     compress=True, **kw)
+        return codec, mk(wire_kernel=True), mk(wire_kernel=False)
+
+    # exact decode
+    codec, e_on, e_off = engines("heter_aware")
+    params = model.init(jax.random.PRNGKey(0))
+    a = codec.decode_vector([0, 2, 3])
+    g_on = e_on.gradients(params, pb, a)
+    g_off = e_off.gradients(params, pb, a)
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    for x, y in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_off)):
+        # fused vs unfused quantize differ by at most 1 ulp of the scale
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=2e-5)
+    rel = max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))) / (np.max(np.abs(np.asarray(y))) + 1e-9))
+        for x, y in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_ref))
+    )
+    assert rel < 0.05, rel  # int8 wire stays within compression tolerance
+
+    # inexact partial-work outcome: the support mask must thread through the
+    # fused encode identically
+    codec, e_on, e_off = engines("partial_work")
+    support = (r.uniform(size=(codec.m, codec.k)) < 0.6).astype(np.float64)
+    outcome = codec.decode_partial(support)
+    assert not outcome.exact and outcome.residual > 0
+    g_on = e_on.gradients(params, pb, outcome)
+    g_off = e_off.gradients(params, pb, outcome)
+    for x, y in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_off)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=2e-5)
+
+    # two steps on the SAME engine: error feedback accumulates in the fused
+    # path too (second-step gradients still agree across wire kernels)
+    g_on2 = e_on.gradients(params, pb, outcome)
+    g_off2 = e_off.gradients(params, pb, outcome)
+    for x, y in zip(jax.tree.leaves(g_on2), jax.tree.leaves(g_off2)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=2e-5)
+    assert float(np.abs(np.asarray(e_on._err)).max()) > 0
+    print("engine spmd wire ok")
+
+
 def check_engine_spmd_churn():
     """Membership-change spmd leg (DESIGN.md §8): the shard_map backend is
     mesh-pinned, so after an in-place shrink the engine is REBUILT on a mesh
@@ -301,6 +377,7 @@ if __name__ == "__main__":
         "fused_sharded": check_fused_sharded_equals_host,
         "engine_spmd": check_engine_spmd,
         "engine_spmd_inexact": check_engine_spmd_inexact,
+        "engine_spmd_wire": check_engine_spmd_wire,
         "engine_spmd_churn": check_engine_spmd_churn,
         "dryrun_small": check_dryrun_small,
     }[sys.argv[1]]()

@@ -54,6 +54,48 @@ def test_coded_reduce_is_the_encode():
     np.testing.assert_allclose(np.asarray(coded), expect, atol=1e-4)
 
 
+@pytest.mark.parametrize("P", [129, 200, 300])
+def test_coded_reduce_large_P(P):
+    """P beyond the 128-row chunk: multi-chunk accumulation with a ragged
+    final chunk must match the oracle."""
+    r = np.random.default_rng(P)
+    D = 1100
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    out = ops.coded_reduce(g, w, impl="pallas_interpret")
+    expect = ref.coded_reduce_ref(g, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("tile_d", [128, 512, 2048])
+def test_coded_reduce_tile_d_override(tile_d):
+    """The autotunable lane tile changes the grid, not the result."""
+    from repro.kernels.coded_reduce import coded_reduce_pallas
+
+    r = np.random.default_rng(0)
+    P, D = 12, 3333
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    out = coded_reduce_pallas(g, w, interpret=True, tile_d=tile_d)
+    expect = ref.coded_reduce_ref(g, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_coded_reduce_best_impl_matches():
+    """impl='best' (autotuned XLA schedule off-TPU) is numerically the same
+    reduction."""
+    r = np.random.default_rng(1)
+    P, D = 8, 5000
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    out = ops.coded_reduce(g, w, impl="best")
+    expect = ref.coded_reduce_ref(g, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -34,6 +34,10 @@ def test_engine_spmd_backend_matches_reference_inexact():
     _run("engine_spmd_inexact")
 
 
+def test_engine_spmd_wire_kernels_match_unfused():
+    _run("engine_spmd_wire")
+
+
 def test_engine_spmd_backend_matches_reference_after_membership_change():
     _run("engine_spmd_churn")
 

@@ -1,0 +1,255 @@
+"""Fused int8 wire kernels vs the host bit-level oracle (DESIGN.md §12).
+
+The fused encode kernel's contract is BIT-equality (in interpret mode)
+against ``ref.encode_int8_oracle_np`` — strict per-op IEEE f32 numpy
+arithmetic, with ``new_err`` specified as the correctly-rounded exact
+residual (the kernel's fused multiply-subtract computes exactly that).
+The oracle's reduce must be the SAME reduction the kernel performs
+(``coded_reduce_pallas`` with ``out_dtype=f32``): a jitted XLA composition
+is NOT a bit oracle — LLVM contracts mul+add chains to FMA
+shape-dependently, so it differs from the kernel by 1 ulp on some shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # image without hypothesis: seeded-random fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro.kernels import ops, ref
+from repro.kernels.coded_reduce import coded_reduce_pallas
+from repro.kernels.wire import coded_decode_int8_pallas, coded_encode_int8_pallas
+
+
+def _oracle_reduce(g, w):
+    # the kernel keeps the coded tile in f32 end-to-end, so the oracle's
+    # reduce must too (bf16 inputs otherwise round through bf16)
+    return coded_reduce_pallas(g, w, interpret=True, out_dtype=jnp.float32)
+
+
+def _encode_both(g, w, err):
+    q, scale, new_err = coded_encode_int8_pallas(g, w, err, interpret=True)
+    oq, oscale, onew = ref.encode_int8_oracle_np(
+        np.asarray(g, np.float32) if g.dtype == jnp.float32 else g,
+        np.asarray(w), np.asarray(err), reduce_fn=_oracle_reduce,
+    )
+    return (np.asarray(q).ravel(), np.asarray(scale).ravel(),
+            np.asarray(new_err).ravel(), oq.ravel(), oscale, onew.ravel())
+
+
+def _assert_bit_equal(g, w, err):
+    q, scale, new_err, oq, oscale, onew = _encode_both(g, w, err)
+    np.testing.assert_array_equal(q, oq)
+    assert scale.tobytes() == np.asarray(oscale).ravel().tobytes(), (
+        scale, oscale)
+    assert new_err.tobytes() == onew.tobytes(), (
+        np.flatnonzero(new_err.view(np.int32) != onew.view(np.int32))[:8])
+
+
+# ---------------------------------------------------------------------------
+# bit-equality sweeps
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(1, 130),  # P (crosses the 128-row chunk boundary)
+    st.integers(1, 4200),  # D (crosses the lane-tile boundary, ragged tails)
+    st.sampled_from([jnp.float32, jnp.bfloat16]),
+    st.integers(0, 100),
+)
+@settings(max_examples=20, deadline=None)
+def test_encode_bit_equal_sweep(P, D, dtype, seed):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=(P, D)), dtype)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    err = jnp.asarray(r.normal(scale=1e-3, size=(D,)), jnp.float32)
+    _assert_bit_equal(g, w, err)
+
+
+@pytest.mark.parametrize(
+    "P,D",
+    [(8, 512), (8, 513), (1, 1), (1, 7), (7, 511), (2, 129), (20, 4097),
+     (128, 128), (130, 1025)],
+)
+def test_encode_bit_equal_edge_shapes(P, D):
+    # P=1 is the FMA trap: a bare w*g+err mul-add that jitted XLA contracts
+    # but the kernel's loop-carried scratch accumulator cannot; tile-exact,
+    # ragged, and chunk-crossing shapes pin the masked last tile
+    r = np.random.default_rng(P * 1000 + D)
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    err = jnp.asarray(r.normal(scale=1e-2, size=(D,)), jnp.float32)
+    _assert_bit_equal(g, w, err)
+
+
+def test_encode_bit_equal_zero_coded():
+    # all-zero coded tensor exercises the EPS_SCALE floor in both paths
+    g = jnp.zeros((4, 100), jnp.float32)
+    w = jnp.zeros((4,), jnp.float32)
+    err = jnp.zeros((100,), jnp.float32)
+    q, scale, new_err, oq, oscale, onew = _encode_both(g, w, err)
+    np.testing.assert_array_equal(q, oq)
+    assert scale.tobytes() == np.asarray(oscale).ravel().tobytes()
+    assert not np.any(q)
+
+
+# ---------------------------------------------------------------------------
+# error feedback over multi-step sequences
+# ---------------------------------------------------------------------------
+
+
+def test_error_feedback_chain_bit_equal():
+    """Six encode steps threading new_err back in: the kernel and the oracle
+    must stay bit-identical along the whole chain (a single-ulp divergence
+    anywhere would compound)."""
+    r = np.random.default_rng(3)
+    P, D = 6, 777
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    err_k = jnp.zeros((D,), jnp.float32)
+    err_o = np.zeros((D,), np.float32)
+    for step in range(6):
+        g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+        q, scale, err_k = coded_encode_int8_pallas(g, w, err_k, interpret=True)
+        oq, oscale, err_o = ref.encode_int8_oracle_np(
+            np.asarray(g), np.asarray(w), err_o, reduce_fn=_oracle_reduce)
+        np.testing.assert_array_equal(np.asarray(q).ravel(), oq.ravel(), err_msg=f"step {step}")
+        assert np.asarray(err_k).ravel().tobytes() == err_o.ravel().tobytes(), f"step {step}"
+        err_k = jnp.asarray(np.asarray(err_k).ravel())
+
+
+def test_error_feedback_reduces_quantization_bias():
+    """With feedback on, the running mean of dequantized encodes converges
+    to the true coded value (the EF property the wire format exists for)."""
+    r = np.random.default_rng(9)
+    P, D = 4, 2048
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    true = np.asarray(_oracle_reduce(g, w)).ravel()
+    err = jnp.zeros((D,), jnp.float32)
+    acc = np.zeros((D,), np.float64)
+    n = 20
+    for _ in range(n):
+        q, scale, err = coded_encode_int8_pallas(g, w, err, interpret=True)
+        acc += np.asarray(q, np.float64).ravel() * float(np.asarray(scale).ravel()[0])
+        err = jnp.asarray(np.asarray(err).ravel())
+    mean_abs_true = float(np.abs(true).mean())
+    bias = float(np.abs(acc / n - true).mean())
+    one_shot_q, one_shot_s, _ = coded_encode_int8_pallas(
+        g, w, jnp.zeros((D,), jnp.float32), interpret=True)
+    one_shot = np.asarray(one_shot_q, np.float64).ravel() * float(
+        np.asarray(one_shot_s).ravel()[0])
+    bias_one = float(np.abs(one_shot - true).mean())
+    assert bias < 0.2 * bias_one, (bias, bias_one, mean_abs_true)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def test_decode_roundtrip_matches_dequantized_truth():
+    """decode(all-gathered int8 wire) == sum_w a_w*scale_w*q_w to f32
+    accuracy, and close to the uncompressed decode."""
+    r = np.random.default_rng(5)
+    m, P, D = 10, 3, 1500
+    a = r.normal(size=(m,)).astype(np.float32)
+    qs, truth, uncompressed = [], np.zeros((D,), np.float64), np.zeros((D,), np.float64)
+    ws = []
+    for i in range(m):
+        g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+        w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+        q, scale, _ = coded_encode_int8_pallas(
+            g, w, jnp.zeros((D,), jnp.float32), interpret=True)
+        s = float(np.asarray(scale).ravel()[0])
+        qs.append(np.asarray(q).reshape(-1))
+        ws.append(a[i] * s)
+        truth += a[i] * s * np.asarray(q, np.float64).reshape(-1)
+        uncompressed += a[i] * np.asarray(_oracle_reduce(g, w), np.float64).ravel()
+    decoded = coded_decode_int8_pallas(
+        jnp.asarray(np.stack(qs)), jnp.asarray(np.asarray(ws, np.float32)),
+        interpret=True)
+    decoded = np.asarray(decoded, np.float64).ravel()
+    np.testing.assert_allclose(decoded, truth, rtol=1e-5, atol=1e-5)
+    scale_mag = float(np.abs(uncompressed).max())
+    assert float(np.abs(decoded - uncompressed).max()) < 0.02 * scale_mag
+
+
+def test_ops_dispatchers_roundtrip():
+    """ops.coded_encode_int8 / coded_decode_int8: 'xla' and 'pallas_interpret'
+    impls agree to quantizer tolerance (bit-equality is the kernel<->numpy
+    oracle contract, not the kernel<->jitted-XLA one — FMA contraction)."""
+    r = np.random.default_rng(11)
+    P, D = 5, 900
+    g = jnp.asarray(r.normal(size=(P, D)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(P,)), jnp.float32)
+    err = jnp.zeros((D,), jnp.float32)
+    qa, sa, ea = ops.coded_encode_int8(g, w, err, impl="pallas_interpret")
+    qx, sx, ex = ops.coded_encode_int8(g, w, err, impl="xla")
+    np.testing.assert_allclose(np.asarray(sa).ravel(), np.asarray(sx).ravel(), rtol=1e-6)
+    assert np.mean(np.abs(np.asarray(qa).ravel().astype(np.int32)
+                          - np.asarray(qx).ravel().astype(np.int32))) <= 0.01
+    d1 = ops.coded_decode_int8(jnp.asarray(np.asarray(qa).reshape(1, -1)),
+                               jnp.asarray(np.asarray(sa).ravel()), impl="pallas_interpret")
+    d2 = ops.coded_decode_int8(jnp.asarray(np.asarray(qx).reshape(1, -1)),
+                               jnp.asarray(np.asarray(sx).ravel()), impl="xla")
+    np.testing.assert_allclose(np.asarray(d1).ravel(), np.asarray(d2).ravel(),
+                               rtol=1e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# structural regressions (the jnp.pad / wire-tensor HBM fixes)
+# ---------------------------------------------------------------------------
+
+
+def _flat_eqns(jaxpr):
+    for e in jaxpr.eqns:
+        subs = [v for v in e.params.values() if hasattr(v, "jaxpr")]
+        if subs and e.primitive.name != "pallas_call":
+            for sub in subs:
+                inner = sub.jaxpr if hasattr(sub.jaxpr, "eqns") else sub
+                yield from _flat_eqns(inner)
+        else:
+            yield e
+
+
+def test_fused_encode_trace_has_no_f32_wire_tensor():
+    """The non-interpret (TPU) trace of the fused encode is one pallas_call
+    and NO compute primitive touches a D-sized f32 tensor outside it — the
+    coded f32 wire tensor never materializes in HBM."""
+    P, D = 8, (1 << 16) + 3
+    gs = jax.ShapeDtypeStruct((P, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((P,), jnp.float32)
+    es = jax.ShapeDtypeStruct((D,), jnp.float32)
+    closed = jax.make_jaxpr(
+        lambda g, w, e: coded_encode_int8_pallas(g, w, e))(gs, ws, es)
+    eqns = list(_flat_eqns(closed.jaxpr))
+    shape_only = {"reshape", "slice", "squeeze", "broadcast_in_dim", "transpose"}
+    assert sum(e.primitive.name == "pallas_call" for e in eqns) == 1
+
+    def big_f32(v):
+        av = getattr(v, "aval", None)
+        return (av is not None and getattr(av, "dtype", None) == jnp.float32
+                and av.size >= D)
+
+    offenders = [
+        e.primitive.name for e in eqns
+        if e.primitive.name not in shape_only | {"pallas_call"}
+        and (any(big_f32(v) for v in e.invars) or any(big_f32(v) for v in e.outvars))
+    ]
+    assert offenders == [], offenders
+
+
+def test_coded_reduce_trace_is_pad_free():
+    """Ragged D is handled by the in-kernel masked last tile: a `pad`
+    primitive in the trace would mean the old jnp.pad prologue is back
+    (it materialized a second (P, D_pad) copy — doubled peak HBM)."""
+    for P, D in [(8, (1 << 16) + 3), (3, 70), (12, 2000)]:
+        closed = jax.make_jaxpr(lambda g, w: coded_reduce_pallas(g, w))(
+            jax.ShapeDtypeStruct((P, D), jnp.float32),
+            jax.ShapeDtypeStruct((P,), jnp.float32))
+        prims = {e.primitive.name for e in _flat_eqns(closed.jaxpr)}
+        assert "pad" not in prims, (P, D, sorted(prims))
