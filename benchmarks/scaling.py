@@ -42,6 +42,10 @@ MEMBERSHIP_M = (20, 64)
 MEMBERSHIP_SCHEMES = ("heter_aware", "group_based", "bernoulli")
 MEMBERSHIP_BUDGET_MS = 250.0  # acceptance: m=64 heter-aware remap < 250 ms
 
+# spmd engine rebuild (DESIGN.md §13): churn-to-first-step on an 8-device
+# mesh (m=8→7→8, re-jit + err carry + post-transition step included)
+SPMD_REBUILD_BUDGET_MS = 5000.0
+
 
 def _fast() -> bool:
     return os.environ.get("BENCH_FAST", "0") == "1"
@@ -210,6 +214,29 @@ def derived_claims(rows) -> dict[str, float]:
     return claims
 
 
+def run_spmd_rebuild() -> dict[str, float]:
+    """Time the §13 spmd engine rebuild in a subprocess: it needs its own
+    8-fake-device topology (XLA_FLAGS is per-process), so the measurement
+    cannot run in this interpreter.  Returns the claims dict printed by
+    ``benchmarks/spmd_elastic.py``."""
+    import json
+    import subprocess
+
+    script = os.path.join(os.path.dirname(__file__), "spmd_elastic.py")
+    proc = subprocess.run(
+        [sys.executable, script], capture_output=True, text=True, timeout=560,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"spmd_elastic benchmark failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    return {
+        f"membership_{k}": float(v)
+        for k, v in json.loads(proc.stdout.strip().splitlines()[-1]).items()
+    }
+
+
 def _merge_into_bench_run(name: str, claims: dict) -> None:
     """Standalone runs keep results/BENCH_run.json current (atomic +
     schema-stamped via benchmarks._util)."""
@@ -221,6 +248,7 @@ def _merge_into_bench_run(name: str, claims: dict) -> None:
 def main() -> int:
     rows = run()
     claims = derived_claims(rows)
+    claims.update(run_spmd_rebuild())
     print("scheme,m,plan_build_ms,first_decodable_ms,decode_cold_us,decode_warm_us,n_groups")
     for r in rows:
         print(
@@ -257,6 +285,14 @@ def main() -> int:
     if remap >= MEMBERSHIP_BUDGET_MS:
         print(f"FAIL: membership remap budget blown ({remap:.1f}ms >= "
               f"{MEMBERSHIP_BUDGET_MS}ms)", file=sys.stderr)
+        return 1
+    rebuild = claims.get("membership_spmd_rebuild_ms", float("inf"))
+    print(f"# m=8→7→8 spmd engine rebuild (churn-to-first-step): "
+          f"{rebuild:.0f}ms (budget {SPMD_REBUILD_BUDGET_MS:.0f}ms)",
+          file=sys.stderr)
+    if rebuild >= SPMD_REBUILD_BUDGET_MS:
+        print(f"FAIL: spmd rebuild budget blown ({rebuild:.0f}ms >= "
+              f"{SPMD_REBUILD_BUDGET_MS:.0f}ms)", file=sys.stderr)
         return 1
     return 0
 

@@ -6,6 +6,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+echo "== tier-1: spmd elastic rebuild (tests/spmd_driver.py engine_spmd_elastic, 8 fake devices) =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/spmd_driver.py engine_spmd_elastic
 if [[ "${RUN_TIER2:-0}" == "1" ]]; then
   echo "== tier-2: benchmark smoke (BENCH_FAST=1 benchmarks/run.py) =="
   make bench-smoke

@@ -4,5 +4,14 @@ from repro.checkpoint.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.checkpoint.placement import load_arrays, place_rows, place_state
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "load_arrays",
+    "place_state",
+    "place_rows",
+]

@@ -92,27 +92,16 @@ def restore_checkpoint(
 
     ``sharding_fn(key, array)`` may return a jax.sharding.Sharding to place
     each leaf directly onto the new mesh (elastic restart path).
+
+    Recomposed from the standalone halves in
+    :mod:`repro.checkpoint.placement` — ``load_arrays`` (pure I/O) then
+    ``place_state`` (pure placement) — so the elastic rebuild can reuse the
+    placement half without touching the filesystem (DESIGN.md §13).
     """
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
-    for kp, ref in paths:
-        key = "/".join(_path_str(p) for p in kp)
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
-        arr = arr.astype(ref.dtype)
-        if sharding_fn is not None:
-            sh = sharding_fn(key, arr)
-            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["meta"]
+    from repro.checkpoint.placement import load_arrays, place_state
+
+    arrays, meta = load_arrays(directory, step)
+    return place_state(like, arrays, sharding_fn), meta
 
 
 class AsyncCheckpointer:

@@ -1,0 +1,105 @@
+"""Standalone state placement: restore I/O split from device placement.
+
+``restore_checkpoint`` used to interleave npz reads with keypath-walking
+device placement inside one function, which meant the ONLY way to land
+state on a mesh was to come from disk.  The elastic spmd rebuild
+(DESIGN.md §13) needs the placement half without the I/O half — a
+membership transition re-places live per-worker state on a re-derived
+mesh — so the two are separate functions with ``restore_checkpoint``
+recomposed from them:
+
+  - :func:`load_arrays` — pure filesystem: manifest + npz → host arrays.
+    No jax calls, so it can run on a checkpoint-loader thread/process
+    (the MaxText standalone-checkpointer shape).
+  - :func:`place_state` — pure placement: host arrays → device leaves
+    under a ``like`` structure, with optional per-leaf shardings.
+  - :func:`place_rows` — per-worker row-state placement under an optional
+    row identity map.  The engine rebuild and a mid-churn checkpoint
+    restore both go through here, so a live transition and a resume land
+    the wire-path error-feedback buffer on device via ONE code path.
+
+Donation note: surviving leaves of an elastic rebuild are never copied at
+all (the engine keeps the device arrays; XLA's donation in the re-jitted
+step consumes them in place).  These helpers only materialize state that
+genuinely has to move — restored arrays and remapped rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["load_arrays", "place_state", "place_rows"]
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def load_arrays(directory: str, step: int) -> tuple[dict[str, np.ndarray], dict]:
+    """Read one checkpoint's arrays + meta.  Filesystem only — no jax."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    return arrays, manifest.get("meta", {})
+
+
+def place_state(
+    like: PyTree,
+    arrays: dict[str, np.ndarray],
+    sharding_fn: Callable[[str, np.ndarray], Any] | None = None,
+) -> PyTree:
+    """Place host ``arrays`` into the structure of ``like``.
+
+    Shapes must match ``like``; the mesh needn't — ``sharding_fn(key,
+    array)`` may return a Sharding to land each leaf directly on a (possibly
+    different-sized) mesh, which is the elastic-restart path."""
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, ref in paths:
+        key = "/".join(_path_str(p) for p in kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if sharding_fn is not None:
+            sh = sharding_fn(key, arr)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def place_rows(
+    rows, row_map: Sequence[int | None] | None = None
+):
+    """Place a per-worker (m, width) row buffer on device.
+
+    With ``row_map`` (new index → retained old index or None) the rows are
+    remapped through the device gather in
+    :func:`repro.core.aggregator.remap_err_rows` — retained workers keep
+    their row without a host round-trip, joiners get zeros.  Without a map
+    the buffer is placed as-is (checkpoint restore, pure rebalance)."""
+    import jax.numpy as jnp
+
+    if row_map is None:
+        return jnp.asarray(np.asarray(rows, np.float32))
+    from repro.core.aggregator import remap_err_rows
+
+    return remap_err_rows(jnp.asarray(rows), row_map)

@@ -71,6 +71,7 @@ __all__ = [
     "protocol_reference",
     "fused_coded_value_and_grad",
     "faithful_spmd_step",
+    "remap_err_rows",
 ]
 
 PyTree = Any
@@ -91,6 +92,26 @@ def _shard_map(fn, mesh, in_specs, out_specs, manual_axes: tuple[str, ...]):
     # manual: non-coding axes see replicated blocks (duplicate compute over
     # 'model' — acceptable for the protocol/benchmark path on old jax)
     return shard_map(fn, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def remap_err_rows(err: jnp.ndarray, old_of_new) -> jnp.ndarray:
+    """Per-worker wire-state row remap for a membership transition
+    (DESIGN.md §13).
+
+    ``err`` is the spmd backend's (m_old, width) error-feedback buffer;
+    ``old_of_new[i]`` is the old index that became new worker ``i``, or
+    None for a joiner.  Retained workers keep their accumulated residual
+    row — gathered ON DEVICE, so the old buffer is consumed without a host
+    round-trip — while joiners (and the rows of departed workers) start
+    from zero.  Departed state must not leak: a leaver's residual encodes
+    coefficients that no longer exist in the remapped B."""
+    err = jnp.asarray(err)
+    m_old = int(err.shape[0])
+    idx = np.array([m_old if o is None else int(o) for o in old_of_new], np.int32)
+    if np.any((idx < 0) | (idx > m_old)):
+        raise ValueError(f"row map {list(old_of_new)} out of range for m_old={m_old}")
+    padded = jnp.concatenate([err, jnp.zeros((1,) + err.shape[1:], err.dtype)], axis=0)
+    return jnp.take(padded, jnp.asarray(idx), axis=0)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -603,6 +603,17 @@ class FaultyClusterSim(ClusterSim):
         re-admission path) instead of being allocated a fresh identity."""
         self._queued_origs.append(int(orig))
 
+    def cancel_queued_join(self, orig: int) -> bool:
+        """Withdraw a queued re-admission identity (the join never happened
+        — e.g. ``add_workers`` failed after ``queue_join_orig``).  Returns
+        False when the id is no longer queued, which is NOT an error: a
+        partially-applied transition may already have drained it."""
+        try:
+            self._queued_origs.remove(int(orig))
+            return True
+        except ValueError:
+            return False
+
     def on_membership(self, old_of_new: Sequence[int | None]) -> None:
         """Track a membership transition: survivors keep their original id,
         joiners take a queued re-admission id or a fresh one."""

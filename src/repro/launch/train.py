@@ -60,11 +60,13 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--scheme", default="heter_aware", choices=list(scheme_names()))
-    # 'spmd' needs a multi-device mesh the CPU launcher doesn't build; use
-    # StepEngine(backend='spmd', mesh=...) programmatically (tests/spmd_driver.py)
-    ap.add_argument("--backend", default="fused",
-                    choices=[b for b in BACKENDS if b != "spmd"],
-                    help="gradient backend: fused (production) | reference (oracle)")
+    # 'spmd' needs one device per coded worker: launch through scripts/run.sh
+    # with CPU_DEVICES=m (or a real accelerator topology) — the §13 elastic
+    # rebuild then keeps the mesh live across membership changes
+    ap.add_argument("--backend", default="fused", choices=list(BACKENDS),
+                    help="gradient backend: fused (production) | reference "
+                         "(oracle) | spmd (shard_map wire path; needs >= m "
+                         "devices)")
     ap.add_argument("--s", type=int, default=1)
     ap.add_argument("--m", type=int, default=4, help="coded workers")
     ap.add_argument("--part-mb", type=int, default=2)
@@ -140,8 +142,20 @@ def main(argv=None):
         else None
     )
     faults = parse_fault_spec(args.faults) if args.faults else None
+    mesh = None
+    if args.backend == "spmd":
+        from repro.launch.mesh import make_auto_mesh
+
+        if len(jax.devices()) < args.m:
+            raise SystemExit(
+                f"--backend spmd needs >= {args.m} devices for m={args.m} "
+                f"coded workers, found {len(jax.devices())}; launch via "
+                f"CPU_DEVICES={args.m} ./scripts/run.sh ... (or more, so "
+                f"membership can grow)"
+            )
+        mesh = make_auto_mesh((args.m, 1), ("data", "model"))
     trainer = CodedTrainer(
-        model, coding, tc, m=args.m, part_mb=args.part_mb,
+        model, coding, tc, m=args.m, part_mb=args.part_mb, mesh=mesh,
         straggler_model=straggler_from_args(args), true_speeds=speeds, rng=args.seed,
         backend=args.backend, deadline_policy=policy, trace=tracer,
         faults=faults, fault_seed=args.fault_seed,

@@ -78,6 +78,10 @@ class WorkerHealth:
     # pre-eviction snapshot for re-admission
     speed: float | None = None
     c_est: float | None = None
+    # infeasible-eviction backoff: next step the eviction may be retried
+    # and the current retry spacing (doubles per deferral, capped)
+    evict_retry_step: int | None = None
+    evict_backoff: int = 1
 
     def state_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -331,12 +335,27 @@ class FaultSupervisor:
         if self.forensics is not None:
             self.forensics.on_conviction(step, orig, reason, float(h.suspicion))
 
-    def eviction_queue(self) -> list[int]:
-        """Convicted original ids still present in the live worker set."""
+    def eviction_queue(self, step: int | None = None) -> list[int]:
+        """Convicted original ids still present in the live worker set whose
+        eviction is DUE.  An infeasible eviction (m would reach s, remap
+        rejected, device budget) is recorded via
+        :meth:`note_eviction_deferred`, which pushes the retry out with
+        exponential backoff — without the ``step`` filter the same
+        conviction re-surfaces every step (log spam + an O(steps) retry
+        bill).  ``step=None`` keeps the unfiltered view for reporting."""
         return [
             o for o, h in sorted(self.health.items())
             if h.status == "convicted" and self._sim.cur_index(o) is not None
+            and (step is None or h.evict_retry_step is None
+                 or int(step) >= h.evict_retry_step)
         ]
+
+    def note_eviction_deferred(self, step: int, orig: int) -> None:
+        """The trainer could not apply this eviction: keep the worker masked
+        (erasure) and back off the retry — 1, 2, 4, ... steps, capped."""
+        h = self._health(orig)
+        h.evict_retry_step = int(step) + h.evict_backoff
+        h.evict_backoff = min(h.evict_backoff * 2, 64)
 
     def note_evicted(self, step: int, orig: int, speed: float, c_est: float) -> None:
         h = self._health(orig)
@@ -344,6 +363,8 @@ class FaultSupervisor:
         h.evicted_step = int(step)
         h.speed = float(speed)
         h.c_est = float(c_est)
+        h.evict_retry_step = None
+        h.evict_backoff = 1
         self.evictions.append({"step": int(step), "worker": int(orig),
                                "reason": h.reason})
 
@@ -367,6 +388,8 @@ class FaultSupervisor:
         h.consecutive_misses = 0
         h.corrupt_seen = 0
         h.reason = None
+        h.evict_retry_step = None
+        h.evict_backoff = 1
         self.readmissions.append({"step": int(step), "worker": int(orig)})
 
     # -- reporting / checkpoint ----------------------------------------------

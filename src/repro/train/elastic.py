@@ -95,6 +95,13 @@ class ElasticController:
         # arrivals are erased BEFORE the policy resolves, so the decode,
         # the observation plan, and the forensics all see the masked view
         self.fault_filter = None
+        # engine rebuild seam (DESIGN.md §13), installed by whoever owns a
+        # StepEngine: pre_transition(m_new) vetoes an infeasible transition
+        # BEFORE any state mutates (spmd device budget); on_transition(
+        # old_of_new) reports each APPLIED transition's row identity map so
+        # per-worker wire state can be carried across the rebuild
+        self.pre_transition = None
+        self.on_transition = None
         # highest step whose churn events have been drained: a skipped
         # iteration leaves state.step unchanged, so the trainer asks about
         # the same step again and must NOT get the events twice
@@ -248,9 +255,12 @@ class ElasticController:
         old_of_new: list[int | None],
         c_init_new: Sequence[float] | None,
     ) -> MembershipStats:
-        # the transition is atomic: a remap feasibility error (e.g. a user
-        # skew cap that cannot fit the shrunk worker set) must not leave the
+        # the transition is atomic: any feasibility veto — the engine's
+        # device budget here, or a remap error (e.g. a user skew cap that
+        # cannot fit the shrunk worker set) below — must not leave the
         # estimator resized against an unchanged codec
+        if self.pre_transition is not None:
+            self.pre_transition(len(old_of_new))
         est_snapshot = self.estimator.state_dict()
         self.estimator.resize(old_of_new, c_init_new)
         try:
@@ -268,6 +278,8 @@ class ElasticController:
         # the transition re-ran allocation against the current estimate:
         # that IS an applied rebalance for hysteresis purposes
         self.estimator.mark_applied()
+        if self.on_transition is not None:
+            self.on_transition(old_of_new)
         tr = self.tracer
         if tr.enabled:
             tr.instant("elastic.membership", **dataclasses.asdict(stats))
@@ -306,6 +318,13 @@ class ElasticController:
                         f"for {len(ev.join_speeds)} joining workers"
                     )
             m_sim += len(ev.join_speeds)
+            # device feasibility joins the pre-validation: a schedule the
+            # engine cannot host must raise with the cluster untouched
+            if self.pre_transition is not None:
+                if ev.leave:
+                    self.pre_transition(m_sim - len(ev.join_speeds))
+                if ev.join_speeds:
+                    self.pre_transition(m_sim)
         self._churn_drained = step
         stats: MembershipStats | None = None
         for ev in events:

@@ -38,13 +38,15 @@ pre-§6 host-side numpy pack (oracle for equivalence tests and the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import time
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.checkpoint.placement import place_rows
 from repro.configs.base import TrainConfig
 from repro.core.aggregator import (
     faithful_spmd_step,
@@ -57,6 +59,7 @@ from repro.core.aggregator import (
 )
 from repro.core.codec import Codec
 from repro.core.decoding import DecodeOutcome
+from repro.launch.mesh import coded_axis_size, mesh_devices_for_m, remesh_for_m
 from repro.obs.trace import NULL_TRACER
 from repro.optim.adam import AdamWState, adamw_init, adamw_update, global_norm
 from repro.optim.schedules import cosine_warmup
@@ -65,7 +68,26 @@ PyTree = Any
 
 BACKENDS = ("reference", "fused", "spmd")
 
-__all__ = ["BACKENDS", "TrainerState", "StepEngine"]
+__all__ = ["BACKENDS", "TrainerState", "StepEngine", "EngineRebuild"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRebuild:
+    """Report of one elastic spmd rebuild (DESIGN.md §13) — what was torn
+    down, what was carried.  ``err_rows_carried`` counts retained workers
+    whose int8 error-feedback residual survived the transition on device;
+    params/optimizer state never appear here because the rebuild does not
+    touch them at all (they stay on their devices and the re-jitted step
+    consumes them via donation, exactly as before the transition)."""
+
+    version: int  # Codec.version the engine is now keyed to
+    m_before: int
+    m_after: int
+    mesh_rebuilt: bool  # coded-axis extent moved -> new mesh derived
+    program_rebuilt: bool  # (m, n_slots) moved -> shard_map + pack re-jitted
+    err_rows_carried: int
+    err_rows_zeroed: int
+    ms: float  # host-side rebuild latency (excludes lazy retrace)
 
 
 @dataclasses.dataclass
@@ -137,6 +159,19 @@ class StepEngine:
         self._dev_coeff_mask: jnp.ndarray | None = None  # slot_coeff*slot_mask
         self._ones_support: jnp.ndarray | None = None  # (m, k) f32
 
+        # elastic rebuild bookkeeping (DESIGN.md §13), kept on every backend
+        # so membership hooks are safe regardless of backend: the composed
+        # row identity map of transitions applied since the last rebuild,
+        # and the worker-axis shape the live spmd jits were built at
+        self._row_map: list[int | None] | None = None
+        self._spmd_m: int | None = None
+        self._spmd_nslots: int | None = None
+        self.last_rebuild: EngineRebuild | None = None
+        # set when a rebuild moved the mesh: caller-held state (params, opt)
+        # is still committed to the OLD device set and must be re-placed
+        # (device-to-device) before it meets new-mesh outputs in a jit
+        self._state_mesh_stale = False
+
         self._fused_step = jax.jit(self._make_fused_step(), donate_argnums=(0, 1))
         self._fused_grads = jax.jit(self._make_fused_grads())
         if host_pack:
@@ -150,22 +185,15 @@ class StepEngine:
         if backend == "reference":
             self._ref_grad = jax.jit(jax.grad(self._slot_loss))
         if backend == "spmd":
-            self._spmd_grads = jax.jit(
-                faithful_spmd_step(
-                    self._slot_loss, mesh, coding_axes, compress=compress,
-                    wire_kernel=self.wire_kernel,
-                )
-            )
-            self._pack_slots = jax.jit(
-                lambda pbatch, idx: pack_coded_batch(pbatch, self.codec.plan, idx=idx)
-            )
             self._coeff_support = jax.jit(
                 lambda coeff, pids, mask, sup: coeff
                 * support_slot_mask_device(sup, pids, mask)
             )
             self._err = None  # per-worker flat error feedback, built lazily
             self._err_version: int | None = None  # codec.version _err belongs to
+            self._err_width: int | None = None  # D when compressed, else 1
             self._unravel = None  # flat (D,) -> params pytree, built lazily
+            self._build_spmd_program()
 
     # -- state -------------------------------------------------------------
 
@@ -334,6 +362,197 @@ class StepEngine:
         if self.backend == "spmd" and self._err is not None:
             self._err = jnp.zeros_like(self._err)
 
+    # -- elastic spmd rebuild (DESIGN.md §13) -------------------------------
+
+    def _build_spmd_program(self) -> None:
+        """(Re)create the mesh-pinned jits: the shard_map wire program and
+        the in-jit slot pack.  Keyed on (m, n_slots), NOT on input shapes:
+        the pack jit closes over the plan's (m, n_slots) reshape at trace
+        time, so a transition where the m·n_slots product happens to
+        coincide would otherwise reuse a stale trace and silently mis-shape
+        the slot stack."""
+        self._spmd_grads = jax.jit(
+            faithful_spmd_step(
+                self._slot_loss, self.mesh, self.coding_axes,
+                compress=self.compress, wire_kernel=self.wire_kernel,
+            )
+        )
+        self._pack_slots = jax.jit(
+            lambda pbatch, idx: pack_coded_batch(pbatch, self.codec.plan, idx=idx)
+        )
+        self._spmd_m = self.codec.m
+        self._spmd_nslots = self.codec.n_slots
+
+    def _ensure_spmd_program(self) -> tuple[bool, bool]:
+        """Bring mesh + jits in line with the codec's current worker set.
+        Returns (mesh_rebuilt, program_rebuilt)."""
+        m = self.codec.m
+        mesh_rebuilt = False
+        if coded_axis_size(self.mesh, self.coding_axes) != m:
+            self.mesh = remesh_for_m(self.mesh, self.coding_axes, m)
+            mesh_rebuilt = True
+        program_rebuilt = m != self._spmd_m or self.codec.n_slots != self._spmd_nslots
+        if mesh_rebuilt or program_rebuilt:
+            self._build_spmd_program()
+            program_rebuilt = True
+        return mesh_rebuilt, program_rebuilt
+
+    def _replicate_on_mesh(self, tree: PyTree) -> PyTree:
+        """Re-place a replicated pytree onto the engine's CURRENT mesh.
+        Device-to-device (no host round-trip); a no-op for arrays already
+        placed there — this is how params/opt survive a mesh rebuild
+        without being reconstructed."""
+        return jax.device_put(
+            tree, jax.sharding.NamedSharding(self.mesh, jax.sharding.PartitionSpec())
+        )
+
+    def check_membership(self, m_new: int) -> None:
+        """Feasibility gate for a membership transition, called BEFORE any
+        control-plane state mutates (the ElasticController's
+        ``pre_transition`` hook): the spmd rebuild needs one device per
+        coded worker times the mesh's non-coding extent.  Vetoing here
+        keeps the transition atomic — codec, estimator, and sim are all
+        untouched when this raises."""
+        if self.backend != "spmd":
+            return
+        needed = (
+            int(m_new) if self.mesh is None
+            else mesh_devices_for_m(self.mesh, self.coding_axes, int(m_new))
+        )
+        avail = len(jax.devices())
+        if needed > avail:
+            raise ValueError(
+                f"spmd rebuild infeasible: m={m_new} needs {needed} devices "
+                f"({needed // int(m_new)} per coded worker), only {avail} available"
+            )
+
+    def note_membership(self, old_of_new: Sequence[int | None]) -> None:
+        """Record an applied membership transition's row identity map (the
+        controller's ``on_transition`` hook).  Multiple transitions between
+        steps compose into one map; the next :meth:`rebuild` consumes it to
+        carry retained workers' error-feedback rows."""
+        if self.backend != "spmd":
+            return
+        oon = [None if o is None else int(o) for o in old_of_new]
+        prev = self._row_map
+        self._row_map = oon if prev is None else [
+            None if o is None else prev[o] for o in oon
+        ]
+
+    def rebuild(self) -> EngineRebuild | None:
+        """Force the §13 elastic rebuild now if one is pending (normally it
+        runs lazily on the next gradient step).  No-op on non-spmd backends
+        and on an engine that has not stepped yet (nothing to carry — the
+        first step builds fresh state at the live m anyway).  Returns the
+        rebuild report, or None when nothing was pending."""
+        if self.backend != "spmd" or self._unravel is None:
+            return None
+        if self._err is not None and self._err_version == self.codec.version:
+            return None
+        self._rebuild_spmd()
+        return self.last_rebuild
+
+    def _rebuild_spmd(self) -> None:
+        """The elastic rebuild path, keyed by ``Codec.version``: re-derive
+        the mesh at the new m, re-jit the shard_map program if the worker
+        axis moved, and carry retained workers' error-feedback rows across
+        the transition (device gather — the old buffer is consumed without
+        a host round-trip) while joiners/leavers get zeroed rows.
+
+        Params and optimizer state are NOT touched: they live outside the
+        worker axis, stay on their devices, and the re-jitted step donates
+        them exactly as before — the membership delta is the only state
+        that moves.  A version bump with no recorded identity map at an
+        unchanged worker count is a pure re-encode (rebalance): every
+        worker kept its identity, so the whole buffer carries — the
+        residual is the quantization error of gradients already applied,
+        which is coefficient-independent.  Engines driven through an
+        ElasticController always see membership identity maps via
+        :meth:`note_membership`; a direct ``Codec.remap_members`` caller
+        that skips the hook gets zeroed rows whenever m moved (shape
+        mismatch) — the conservative fallback."""
+        t0 = time.perf_counter()
+        m = self.codec.m
+        m_before = self._spmd_m if self._spmd_m is not None else m
+        mesh_rebuilt, program_rebuilt = self._ensure_spmd_program()
+        width = self._err_width
+        carried = 0
+        if (
+            self._err is not None
+            and self._row_map is not None
+            and len(self._row_map) == m
+        ):
+            self._err = place_rows(self._err, self._row_map)
+            carried = sum(1 for o in self._row_map if o is not None)
+        elif (
+            self._err is not None
+            and self._row_map is None
+            and self._err.shape == (m, width)
+        ):
+            carried = m  # pure rebalance: identities unchanged, all rows carry
+        else:
+            self._err = jnp.zeros((m, width), jnp.float32)
+        if mesh_rebuilt and self.mesh is not None:
+            # the carried rows are still committed to the OLD device set;
+            # re-place them onto the new mesh (device-to-device gather —
+            # the rows never bounce through the host) under the program's
+            # err spec: dim 0 split over the coding axes
+            self._err = jax.device_put(
+                self._err,
+                jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec(self.coding_axes)
+                ),
+            )
+            self._state_mesh_stale = True
+        self._row_map = None
+        self._err_version = self.codec.version
+        self.last_rebuild = EngineRebuild(
+            version=int(self.codec.version),
+            m_before=int(m_before), m_after=int(m),
+            mesh_rebuilt=mesh_rebuilt, program_rebuilt=program_rebuilt,
+            err_rows_carried=int(carried), err_rows_zeroed=int(m - carried),
+            ms=(time.perf_counter() - t0) * 1e3,
+        )
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "engine.rebuild", **dataclasses.asdict(self.last_rebuild)
+            )
+
+    def state_dict(self) -> dict:
+        """JSON-able wire-path state beyond (params, opt): the spmd
+        backend's per-worker error-feedback buffer keyed to its codec
+        version.  Restoring it makes a mid-churn spmd resume bit-exact
+        INCLUDING the compression residuals; other backends hold no device
+        state outside (params, opt) and return {}."""
+        if self.backend != "spmd" or self._err is None:
+            return {}
+        return {
+            "err": np.asarray(self._err, np.float32).tolist(),
+            "err_version": int(self._err_version),
+            "err_width": int(self._err_width),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore wire-path state.  The codec must already be restored
+        (the trainer orders codec → elastic → engine), so the mesh and
+        program are rebuilt here against the restored worker set, and the
+        err buffer lands on device through the same placement path the
+        elastic rebuild uses (:func:`repro.checkpoint.placement.place_rows`).
+        An empty dict (old checkpoint, or pre-first-step) resets to the
+        lazy-build state."""
+        if self.backend != "spmd":
+            return
+        self._row_map = None
+        self._ensure_spmd_program()
+        if not state:
+            self._err = None
+            self._err_version = None
+            return
+        err = np.asarray(state["err"], np.float32)
+        self._err = place_rows(err)
+        self._err_version = int(state["err_version"])
+        self._err_width = int(state.get("err_width", err.shape[1]))
+
     # -- gradients (backend seam, used directly by the equivalence tests) ---
 
     def _spmd_gradients(self, params: PyTree, partition_batch: dict, a, support) -> PyTree:
@@ -344,6 +563,20 @@ class StepEngine:
         tr = self.tracer
         traced = tr.enabled
         t0 = tr.clock() if traced else 0.0
+        if self._unravel is None:
+            flat0, self._unravel = ravel_pytree(params)
+            self._err_width = int(flat0.size) if self.compress else 1
+        if self._err is None or self._err_version != self.codec.version:
+            # first call, or a membership change / rebalance re-encoded the
+            # plan: run the elastic rebuild — mesh + program re-derived at
+            # the live m, retained workers' error-feedback rows carried,
+            # joiners/leavers zeroed (DESIGN.md §13).  Must precede the
+            # pack: its jit closes over the plan's worker-axis shape.
+            self._rebuild_spmd()
+        if self._state_mesh_stale:
+            # params may still be committed to the pre-rebuild device set;
+            # the flag is cleared by step() once opt is re-placed too
+            params = self._replicate_on_mesh(params)
         plan = self.codec.plan
         pids, _, mask = self._device_plan()
         pbatch = jax.tree.map(jnp.asarray, partition_batch)
@@ -358,15 +591,6 @@ class StepEngine:
                 self._dev_coeff_mask, pids, mask, self._support_dev(support)
             )
         a_dev = jnp.asarray(np.asarray(a) / plan.k, jnp.float32)
-        if self._unravel is None or self._err_version != self.codec.version:
-            # first call, or a membership change / rebalance re-encoded the
-            # plan: per-worker error feedback keyed to the OLD worker
-            # indices or coefficients must not leak into the new encoding
-            # (shape comparison alone misses a remove+add that restores m)
-            flat0, self._unravel = ravel_pytree(params)
-            width = int(flat0.size) if self.compress else 1
-            self._err = jnp.zeros((self.codec.m, width), jnp.float32)
-            self._err_version = self.codec.version
         if traced:
             t1 = tr.clock()
             tr.span_at("phase.spmd.pack", t0, t1, clock="wall", where="host")
@@ -468,6 +692,17 @@ class StepEngine:
         else:
             t0 = tr.clock() if traced else 0.0
             grads = self.gradients(state.params, partition_batch, a)
+            if self.backend == "spmd" and self._state_mesh_stale:
+                # a rebuild moved the mesh under this step: re-place the
+                # caller's (params, opt) onto it before the loss/apply jits
+                # mix them with new-mesh grads (device-to-device, values
+                # untouched — the resume stays bit-exact)
+                state = TrainerState(
+                    params=self._replicate_on_mesh(state.params),
+                    opt=self._replicate_on_mesh(state.opt),
+                    step=state.step,
+                )
+                self._state_mesh_stale = False
             if traced:
                 t1 = tr.clock()
                 name = ("phase.pack+encode+wire+decode" if self.backend == "spmd"

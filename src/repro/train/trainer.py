@@ -117,6 +117,15 @@ class CodedTrainer:
             self.codec, true_speeds=true_speeds, comm_time=comm_time, c_init=c_init,
             policy=deadline_policy, churn=churn, faults=faults, fault_seed=fault_seed,
         )
+        # elastic spmd rebuild (DESIGN.md §13): the engine vetoes device-
+        # infeasible transitions BEFORE any control-plane state mutates and
+        # learns each applied transition's row identity map, so the wire
+        # path's error-feedback rows survive churn.  Every membership path —
+        # manual add/remove, scheduled churn, fault eviction/readmission —
+        # funnels through the controller's _transition, so one pair of hooks
+        # covers them all.
+        self.elastic.pre_transition = self.engine.check_membership
+        self.elastic.on_transition = self.engine.note_membership
         # -- observability (DESIGN.md §10): one tracer threaded through the
         # whole stack.  Off (the default) it is the NULL singleton and every
         # instrumented site costs one attribute check; the numerics are
@@ -177,16 +186,6 @@ class CodedTrainer:
     def _exact_fraction(self) -> float:
         return self._exact_steps / max(self._steps_taken, 1)
 
-    def _check_membership_supported(self) -> None:
-        """Membership changes must be rejected BEFORE any state mutates: the
-        spmd backend shards over a fixed device mesh, so an in-place m
-        change would corrupt the wire layout (rebuild path: DESIGN.md §8)."""
-        if self.engine.backend == "spmd":
-            raise NotImplementedError(
-                "the spmd backend shards over a fixed device mesh; in-place "
-                "membership changes need a rebuilt engine/mesh (see DESIGN.md §8)"
-            )
-
     def apply_membership(self, stats: MembershipStats) -> MembershipStats:
         """Record an in-place membership transition that the controller just
         applied: sync the trainer's worker count (straggler sampling, batch
@@ -196,13 +195,15 @@ class CodedTrainer:
         return stats
 
     def add_workers(self, speeds, c_init=None) -> MembershipStats:
-        """Manual in-place grow — the controller transition + trainer sync."""
-        self._check_membership_supported()
+        """Manual in-place grow — the controller transition + trainer sync.
+        On the spmd backend the engine validates device feasibility up
+        front and lazily rebuilds mesh + program at the new m (§13)."""
         return self.apply_membership(self.elastic.add_workers(speeds, c_init))
 
     def remove_workers(self, ids) -> MembershipStats:
-        """Manual in-place shrink — the controller transition + trainer sync."""
-        self._check_membership_supported()
+        """Manual in-place shrink — the controller transition + trainer sync.
+        Spmd engines rebuild lazily at the shrunk m, carrying survivors'
+        wire state (§13)."""
         return self.apply_membership(self.elastic.remove_workers(ids))
 
     # -- resilience: eviction drain + non-finite payload guard (§11) ---------
@@ -211,25 +212,29 @@ class CodedTrainer:
         """Apply the supervisor's pending membership repairs BEFORE the
         step: evict convicted workers through the elastic path (one
         ``Codec.version`` bump each, via the membership remap), re-admit
-        recovered hang victims under their original identity.  An
-        infeasible eviction (m would reach s, a structural scheme rejects
-        the shrunk m, the spmd backend's fixed mesh) leaves the worker
-        masked — degraded, not crashed."""
+        recovered hang victims under their original identity.  The spmd
+        backend takes the same path — the engine rebuilds its mesh/program
+        at the new m on the next step (§13).  An infeasible eviction (m
+        would reach s, a structural scheme rejects the shrunk m, the spmd
+        device budget) leaves the worker masked — degraded, not crashed —
+        and is retried with exponential backoff instead of every step."""
         sup = self.supervisor
         sim = self.elastic.sim
         tr = self.tracer
-        if self.engine.backend == "spmd":
-            return  # fixed mesh: convicted workers stay masked (erasure only)
-        for orig in sup.eviction_queue():
+        for orig in sup.eviction_queue(step):
             cur = sim.cur_index(orig)
-            if cur is None or self.m - 1 <= self.codec.s:
+            if cur is None:
                 continue
+            if self.m - 1 <= self.codec.s:
+                sup.note_eviction_deferred(step, orig)
+                continue  # stays masked; retry after backoff
             speed = float(self.elastic.true_speeds[cur])
             c_est = float(self.elastic.estimator.c[cur])
             try:
                 self.remove_workers([cur])
-            except (ValueError, NotImplementedError):
-                continue  # remap infeasible at m-1: stay masked
+            except ValueError:
+                sup.note_eviction_deferred(step, orig)
+                continue  # remap/device infeasible at m-1: stay masked
             sup.note_evicted(step, orig, speed, c_est)
             if tr.enabled:
                 tr.instant("fault.evict", step=int(step), worker=int(orig),
@@ -244,8 +249,8 @@ class CodedTrainer:
             sim.queue_join_orig(orig)
             try:
                 self.add_workers([speed], c_init=[c_est])
-            except (ValueError, NotImplementedError):
-                sim._queued_origs.remove(orig)  # leave it evicted
+            except ValueError:
+                sim.cancel_queued_join(orig)  # leave it evicted
                 continue
             sup.note_readmitted(step, orig)
             if tr.enabled:
@@ -393,7 +398,6 @@ class CodedTrainer:
             self._drain_fault_actions(state.step)
         churn_stats = None
         if self.elastic.sim.membership_events(state.step):
-            self._check_membership_supported()
             churn_stats = self.elastic.apply_churn(state.step)
             if churn_stats is not None:
                 self.apply_membership(churn_stats)
@@ -593,6 +597,9 @@ class CodedTrainer:
             "trainer_rng_state": copy.deepcopy(self._rng.bit_generator.state),
             "elastic": self.elastic.state_dict(),
             "codec": self.codec.state_dict(),
+            # wire-path state (spmd int8 error feedback; {} elsewhere) —
+            # restoring it pins a mid-churn spmd resume bit-exact (§13)
+            "engine": self.engine.state_dict(),
             # the sim clock is observability-only (trace timeline offsets) —
             # restoring it keeps a resumed run's trace contiguous
             "sim_now": float(self._sim_now),
@@ -617,6 +624,10 @@ class CodedTrainer:
         self.codec.load_state_dict(extras["codec"])
         self.elastic.load_state_dict(extras["elastic"])
         self.m = self.codec.m
+        # engine AFTER codec: the spmd mesh/program rebuild inside targets
+        # the restored worker set (missing key = pre-§13 checkpoint: the
+        # engine rebuilds with zeroed error feedback, the old semantics)
+        self.engine.load_state_dict(extras.get("engine") or {})
         self._sim_now = float(extras.get("sim_now", 0.0))
         # resilience state AFTER elastic: the fault sim's identity map must
         # land on the already-resized worker set

@@ -8,7 +8,8 @@ Exits 0 on success; prints diagnostics on failure.
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# respect a pre-set XLA_FLAGS (scripts/run.sh builds one from CPU_DEVICES)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -32,6 +33,37 @@ def _toy():
         "w2": jnp.asarray(r.normal(size=(16, 1)), jnp.float32),
     }
     return loss_fn, params, r
+
+
+class _ToyModel:
+    """Duck-typed model for the engine/trainer checks (init + weighted_loss)."""
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        return {
+            "w1": jax.random.normal(k1, (4, 16), jnp.float32),
+            "w2": jax.random.normal(k2, (16, 1), jnp.float32),
+        }
+
+    def weighted_loss(self, params, batch):
+        pred = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+        return jnp.sum((pred[:, 0] - batch["y"]) ** 2 * batch["weight"])
+
+
+def _pdata(k: int, step: int, mb: int = 2):
+    """Deterministic partition-major batch for step ``step``."""
+    r = np.random.default_rng(1000 + step)
+    return {
+        "x": r.normal(size=(k, mb, 4)).astype(np.float32),
+        "y": r.normal(size=(k, mb)).astype(np.float32),
+    }
+
+
+def _leaves_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
 
 
 def check_faithful_spmd():
@@ -321,6 +353,211 @@ def check_engine_spmd_churn():
     print("engine spmd churn ok")
 
 
+def check_engine_spmd_elastic():
+    """Device-donating elastic rebuild (DESIGN.md §13): the SAME spmd engine
+    survives grow, shrink, fault-eviction, and re-admission in place.
+
+    Pinned here: (a) post-transition grads equal the reference oracle on
+    the live codec; (b) the rebuilt engine is BIT-equal to a fresh engine
+    constructed directly at the new m (the rebuild is the identity on the
+    numerics); (c) retained workers' int8 error-feedback rows carry across
+    membership transitions (joiners zeroed) and across a pure rebalance
+    (m unchanged, c changed — satellite of PR 10), proven by a 2-step
+    error-feedback chain against a buffer-seeded twin; (d) the carried
+    residual actually matters (a zero-err twin diverges)."""
+    from repro.configs.base import TrainConfig
+    from repro.core import Codec, get_scheme
+    from repro.core.simulator import FaultEvent, FaultSchedule
+    from repro.configs.base import CodingConfig
+    from repro.train.elastic import ElasticController
+    from repro.train.engine import StepEngine
+    from repro.train.trainer import CodedTrainer
+
+    model = _ToyModel()
+    tc = TrainConfig()
+    params = model.init(jax.random.PRNGKey(0))
+    pb = _pdata(8, 0)
+
+    def wire(ctl, eng):
+        ctl.pre_transition = eng.check_membership
+        ctl.on_transition = eng.note_membership
+
+    def fresh_at(codec, m, **kw):
+        return StepEngine(
+            model, tc, codec, backend="spmd",
+            mesh=make_auto_mesh((m, 1), ("data", "model")), **kw,
+        )
+
+    # ---- (a)+(b): exactness across grow and shrink (uncompressed wire) ----
+    codec = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=[1, 2, 3, 2], rng=0))
+    ctl = ElasticController(codec, true_speeds=np.array([1.0, 2.0, 3.0, 2.0]))
+    eng = StepEngine(model, tc, codec, backend="spmd",
+                     mesh=make_auto_mesh((4, 1), ("data", "model")))
+    wire(ctl, eng)
+    eng.gradients(params, pb, codec.decode_vector([0, 2, 3]))  # prime at m=4
+
+    ctl.add_workers([2.5, 1.5])  # 4 -> 6, same engine
+    a = codec.decode_vector(range(codec.m))
+    g = eng.gradients(params, pb, a)
+    rb = eng.last_rebuild
+    assert rb is not None and rb.m_before == 4 and rb.m_after == 6
+    assert rb.mesh_rebuilt and rb.program_rebuilt
+    assert rb.err_rows_carried == 4 and rb.err_rows_zeroed == 2
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    for x, y in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    assert _leaves_equal(g, fresh_at(codec, 6).gradients(params, pb, a))
+
+    ctl.remove_workers([1])  # 6 -> 5, same engine
+    a = codec.decode_vector(range(codec.m))
+    g = eng.gradients(params, pb, a)
+    rb = eng.last_rebuild
+    assert rb.m_before == 6 and rb.m_after == 5 and rb.err_rows_carried == 5
+    g_ref = StepEngine(model, tc, codec, backend="reference").gradients(params, pb, a)
+    for x, y in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    assert _leaves_equal(g, fresh_at(codec, 5).gradients(params, pb, a))
+
+    # ---- (c)+(d): error-feedback carry-over on the compressed wire ----
+    codec = Codec(get_scheme("heter_aware", m=4, k=8, s=1, c=[1, 2, 3, 2], rng=0))
+    ctl = ElasticController(codec, true_speeds=np.array([1.0, 2.0, 3.0, 2.0]))
+    eng = StepEngine(model, tc, codec, backend="spmd", compress=True,
+                     wire_kernel=False,
+                     mesh=make_auto_mesh((4, 1), ("data", "model")))
+    wire(ctl, eng)
+    eng.gradients(params, pb, codec.decode_vector([0, 2, 3]))
+    err0 = np.asarray(eng._err)  # (4, D) residuals, populated by the step
+    assert np.abs(err0).max() > 0
+
+    # membership carry: survivors keep rows bit-exactly, the joiner zeroes
+    ctl.add_workers([2.5])  # 4 -> 5
+    rb = eng.rebuild()
+    assert rb.err_rows_carried == 4 and rb.err_rows_zeroed == 1
+    err1 = np.asarray(eng._err)
+    np.testing.assert_array_equal(err1[:4], err0)
+    assert np.all(err1[4] == 0)
+
+    # 2-step chain: the rebuilt engine's next step is bit-equal to a twin
+    # seeded with the carried buffer, and diverges from a zero-err twin
+    a = codec.decode_vector(range(codec.m))
+    pb2 = _pdata(8, 1)
+    twin = fresh_at(codec, 5, compress=True, wire_kernel=False)
+    twin._err, twin._err_version = jnp.asarray(err1), codec.version
+    cold = fresh_at(codec, 5, compress=True, wire_kernel=False)
+    g = eng.gradients(params, pb2, a)
+    assert _leaves_equal(g, twin.gradients(params, pb2, a))
+    assert _leaves_equal(np.asarray(eng._err), np.asarray(twin._err))
+    assert not _leaves_equal(g, cold.gradients(params, pb2, a))
+
+    # pure rebalance (m unchanged, c changed): identities unchanged, the
+    # WHOLE buffer carries — the pre-§13 engine zeroed it here
+    err2 = np.asarray(eng._err)
+    codec.rebalance(np.array([1.0, 1.0, 2.0, 3.0, 2.0]))
+    rb = eng.rebuild()
+    assert rb.err_rows_carried == 5 and rb.err_rows_zeroed == 0
+    assert not rb.mesh_rebuilt and not rb.program_rebuilt
+    np.testing.assert_array_equal(np.asarray(eng._err), err2)
+    a = codec.decode_vector(range(codec.m))
+    pb3 = _pdata(8, 2)
+    twin = fresh_at(codec, 5, compress=True, wire_kernel=False)
+    twin._err, twin._err_version = jnp.asarray(err2), codec.version
+    g = eng.gradients(params, pb3, a)
+    assert _leaves_equal(g, twin.gradients(params, pb3, a))
+
+    # ---- fault eviction + re-admission through the full trainer ----
+    sched = FaultSchedule([FaultEvent(kind="hang", worker=1, step=4, duration=5)])
+    tr = CodedTrainer(
+        _ToyModel(),
+        CodingConfig(scheme="heter_aware", s=1, rebalance_every=3),
+        TrainConfig(lr=1e-2, warmup_steps=2, total_steps=40),
+        m=4, part_mb=2, backend="spmd",
+        mesh=make_auto_mesh((4, 1), ("data", "model")),
+        true_speeds=np.linspace(1.0, 2.0, 4), comm_time=0.01, rng=3,
+        faults=sched,
+    )
+    state = tr.init_state(jax.random.PRNGKey(0))
+    m_seen = []
+    for step in range(24):
+        state, met = tr.step(state, _pdata(tr.k, state.step))
+        m_seen.append(tr.m)
+    sup = tr.supervisor
+    assert min(m_seen) == 3, m_seen  # evicted through the spmd rebuild...
+    assert tr.m == 4  # ... and re-admitted after recovery
+    assert len(sup.evictions) == 1 and len(sup.readmissions) == 1
+    assert tr.engine.last_rebuild is not None
+    assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(state.params))
+    # the post-churn engine still matches the oracle on the live codec
+    a = tr.codec.decode_vector(range(tr.m))
+    g = tr.engine.gradients(state.params, _pdata(tr.k, 99), a)
+    g_ref = StepEngine(_ToyModel(), tc, tr.codec, backend="reference").gradients(
+        state.params, _pdata(tr.k, 99), a
+    )
+    for x, y in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    print("engine spmd elastic ok")
+
+
+def check_spmd_trainer_resume():
+    """Bit-exact mid-churn resume on the spmd backend (DESIGN.md §13
+    acceptance): run A trains through join+leave churn in one go; run B
+    checkpoints BETWEEN the join and the leave (m grown, compressed-wire
+    error feedback live), restores into a FRESH trainer constructed at the
+    original m, and must land on bit-identical params, optimizer state,
+    and error-feedback buffer."""
+    import json
+
+    from repro.configs.base import CodingConfig, TrainConfig
+    from repro.core.simulator import ChurnSchedule, MembershipEvent
+    from repro.train.trainer import CodedTrainer
+
+    def mk():
+        return CodedTrainer(
+            _ToyModel(),
+            CodingConfig(scheme="heter_aware", s=1, rebalance_every=3,
+                         compress=True, wire_kernel=False),
+            TrainConfig(lr=1e-2, warmup_steps=2, total_steps=16),
+            m=4, part_mb=2, backend="spmd",
+            mesh=make_auto_mesh((4, 1), ("data", "model")),
+            true_speeds=np.array([1.0, 2.0, 3.0, 2.0]),
+            comm_time=0.01, rng=3,
+            churn=ChurnSchedule([
+                MembershipEvent(step=2, join_speeds=(2.5, 1.5)),
+                MembershipEvent(step=4, leave=(1, 4)),
+            ]),
+        )
+
+    steps, split = 6, 3
+
+    tr_a = mk()
+    st = tr_a.init_state(jax.random.PRNGKey(0))
+    for step in range(steps):
+        st, _ = tr_a.step(st, _pdata(tr_a.k, st.step))
+    final_a = st
+
+    tr_b = mk()
+    st = tr_b.init_state(jax.random.PRNGKey(0))
+    for step in range(split):
+        st, _ = tr_b.step(st, _pdata(tr_b.k, st.step))
+    assert tr_b.m == 6  # mid-churn: after the join, before the leave
+    # JSON round-trip = what the on-disk manifest does to the extras
+    extras = json.loads(json.dumps(tr_b.state_extras()))
+    saved = jax.tree.map(lambda x: np.asarray(x), (st.params, st.opt))
+
+    tr_c = mk()  # fresh process stand-in: constructed at the ORIGINAL m=4
+    tr_c.load_state_extras(extras)
+    assert tr_c.m == 6 and tr_c.engine._err is not None
+    st_c = type(st)(params=jax.tree.map(jnp.asarray, saved[0]),
+                    opt=jax.tree.map(jnp.asarray, saved[1]), step=split)
+    for step in range(split, steps):
+        st_c, _ = tr_c.step(st_c, _pdata(tr_c.k, st_c.step))
+
+    assert _leaves_equal(st_c.params, final_a.params)
+    assert _leaves_equal(st_c.opt, final_a.opt)
+    assert _leaves_equal(tr_c.engine._err, tr_a.engine._err)
+    assert tr_c.codec.version == tr_a.codec.version
+    print("spmd trainer resume ok")
+
+
 def check_dryrun_small():
     """Miniature dry-run: lower+compile a reduced arch on a 4x2 mesh with the
     same code path as launch/dryrun (which needs 512 devices)."""
@@ -379,5 +616,7 @@ if __name__ == "__main__":
         "engine_spmd_inexact": check_engine_spmd_inexact,
         "engine_spmd_wire": check_engine_spmd_wire,
         "engine_spmd_churn": check_engine_spmd_churn,
+        "engine_spmd_elastic": check_engine_spmd_elastic,
+        "spmd_trainer_resume": check_spmd_trainer_resume,
         "dryrun_small": check_dryrun_small,
     }[sys.argv[1]]()

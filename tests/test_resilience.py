@@ -339,6 +339,62 @@ def test_masking_degrades_gracefully_when_eviction_infeasible():
     assert _finite(state.params)
 
 
+def test_infeasible_eviction_backs_off_instead_of_retrying_every_step():
+    """An eviction that cannot be applied must NOT re-surface the same
+    conviction in every step's queue (log spam + O(steps) retry cost):
+    ``note_eviction_deferred`` pushes the retry out with doubling backoff,
+    so due-steps thin out exponentially while the worker stays masked."""
+    sched = FaultSchedule([FaultEvent(kind="crash", worker=1, step=2)])
+    tr = _mk_trainer(scheme="cyclic", m=2, faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    sup = tr.supervisor
+    due_steps = []
+    for step in range(40):
+        # mirror the trainer's drain: record when the queue actually
+        # re-surfaces the conviction (the trainer defers each time)
+        tr.elastic.sim.begin_step(state.step)
+        if sup.eviction_queue(state.step):
+            due_steps.append(state.step)
+        state, _ = tr.step(state, _batch(tr.k, state.step))
+    assert sup.masked_origs() == {1} and not sup.evictions
+    h = sup.health[1]
+    assert h.evict_retry_step is not None and h.evict_backoff > 1
+    # ~38 post-conviction steps: naive retry-every-step would give ~38 dues;
+    # doubling backoff caps it around log2
+    assert 1 <= len(due_steps) <= 8, due_steps
+    assert all(b - a >= 1 for a, b in zip(due_steps, due_steps[1:]))
+    # the unfiltered (reporting) view still shows the conviction pending
+    assert sup.eviction_queue() == [1]
+
+
+def test_eviction_backoff_resets_on_successful_eviction():
+    """Once the eviction goes through, the backoff state is cleared — a
+    later re-admission starts from a clean slate."""
+    sched = FaultSchedule([FaultEvent(kind="hang", worker=1, step=4, duration=5)])
+    tr = _mk_trainer(faults=sched)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    for step in range(24):
+        state, _ = tr.step(state, _batch(tr.k, state.step))
+    sup = tr.supervisor
+    assert sup.evictions and sup.readmissions
+    h = sup.health[1]
+    assert h.status == "healthy"
+    assert h.evict_retry_step is None and h.evict_backoff == 1
+
+
+def test_cancel_queued_join_is_tolerant():
+    """The readmit failure path withdraws the queued identity through the
+    public API; cancelling an already-drained (or never-queued) id is a
+    False return, not an exception — the old private-attr poke raised."""
+    sched = FaultSchedule([FaultEvent(kind="hang", worker=1, step=4, duration=5)])
+    tr = _mk_trainer(faults=sched)
+    sim = tr.elastic.sim
+    sim.queue_join_orig(7)
+    assert sim.cancel_queued_join(7) is True
+    assert sim.cancel_queued_join(7) is False  # already drained
+    assert sim.cancel_queued_join(99) is False  # never queued
+
+
 def test_supervisor_requires_faulty_sim():
     tr = _mk_trainer()  # no faults -> plain ClusterSim
     with pytest.raises(TypeError):
